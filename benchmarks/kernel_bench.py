@@ -1,0 +1,71 @@
+"""Kernel microbenchmarks: packed-ternary matmul / conv2d vs dense reference.
+
+On this CPU container the *wall-clock* of interpret-mode Pallas is
+meaningless; what we measure and report:
+  * correctness deltas vs ref (sanity),
+  * weight-bytes moved (the 8x HBM reduction that is the kernel's point),
+  * wall time of the jnp packed path vs dense jnp (XLA CPU) as a directional
+    signal only.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ternary import packed_nbytes
+from repro.kernels import (
+    quantize_pack_conv_weights,
+    quantize_pack_matmul_weights,
+    ternary_conv2d,
+    ternary_matmul,
+)
+from repro.kernels.ref import ternary_conv2d_ref, ternary_matmul_ref
+
+
+def _time(fn, *args, n=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def bench_matmul(m=512, k=2048, n=512):
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+    wp, sc = quantize_pack_matmul_weights(w)
+    dense_t = _time(jax.jit(lambda x, w: x @ w), x, w)
+    ref_t = _time(jax.jit(ternary_matmul_ref), x, wp, sc)
+    pallas_t = _time(lambda x, wp, sc: ternary_matmul(x, wp, sc), x, wp, sc)
+    err = float(jnp.max(jnp.abs(ternary_matmul(x, wp, sc) - ternary_matmul_ref(x, wp, sc))))
+    return {
+        "name": f"ternary_matmul_{m}x{k}x{n}",
+        "dense_us": dense_t * 1e6,
+        "ref_packed_us": ref_t * 1e6,
+        "pallas_interp_us": pallas_t * 1e6,
+        "weight_bytes_dense_bf16": k * n * 2,
+        "weight_bytes_packed": packed_nbytes((k, n), axis=0),
+        "bytes_reduction": (k * n * 2) / packed_nbytes((k, n), axis=0),
+        "max_err_vs_ref": err,
+    }
+
+
+def bench_conv(b=4, hw=32, cin=96, cout=96):
+    x = jax.random.normal(jax.random.PRNGKey(2), (b, hw, hw, cin))
+    w = jax.random.normal(jax.random.PRNGKey(3), (3, 3, cin, cout))
+    wp, sc = quantize_pack_conv_weights(w)
+    ref_t = _time(jax.jit(ternary_conv2d_ref), x, wp, sc)
+    pallas_t = _time(lambda x, wp, sc: ternary_conv2d(x, wp, sc), x, wp, sc)
+    err = float(jnp.max(jnp.abs(ternary_conv2d(x, wp, sc) - ternary_conv2d_ref(x, wp, sc))))
+    return {
+        "name": f"ternary_conv2d_{b}x{hw}x{hw}x{cin}->{cout}",
+        "ref_packed_us": ref_t * 1e6,
+        "pallas_interp_us": pallas_t * 1e6,
+        "weight_bytes_dense_bf16": 9 * cin * cout * 2,
+        "weight_bytes_packed": packed_nbytes((3, 3, cin, cout), axis=2),
+        "max_err_vs_ref": err,
+    }

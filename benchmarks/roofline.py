@@ -1,0 +1,134 @@
+"""Roofline analysis from the dry-run artifacts (experiments/dryrun/*.json).
+
+Per (arch x shape) on the single-pod 16x16 mesh:
+
+    compute term    = HLO_FLOPs / (chips * 197e12)        [s]
+    memory term     = HLO_bytes / (chips * 819e9)         [s]
+    collective term = collective_bytes / (chips * ICI_BW) [s]
+
+HLO_FLOPs / bytes come from the probe-extrapolated cost_analysis (scan
+bodies counted per layer); collective bytes from the HLO-text parse.  All
+three quantities are PER-DEVICE in SPMD HLO, so the roofline terms divide by
+ONE chip's peaks; MODEL_FLOPS is global and divides by all 256.
+
+Hardware (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI with
+2 links usable per collective step on a 2-D torus axis -> 100 GB/s/chip.
+
+Conventions (documented in EXPERIMENTS.md):
+  * MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill/decode), N = active params.
+  * bytes-accessed on CPU-compiled HLO OVERSTATES bf16 traffic ~2x (XLA CPU
+    upcasts bf16 to f32); we report raw numbers and note the artifact.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 100e9             # bytes/s / chip (2x 50GB/s links per torus axis)
+CHIPS = 256
+
+ART_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def model_flops(n_active: int, tokens: int, kind: str) -> float:
+    return (6.0 if kind == "train" else 2.0) * n_active * tokens
+
+
+def load_cell(arch: str, shape: str, mesh: str = "pod16x16", quant: str = "none") -> Optional[dict]:
+    qtag = f"__{quant}" if quant != "none" else ""
+    p = ART_DIR / f"{arch}__{shape}__{mesh}{qtag}.json"
+    if not p.exists():
+        return None
+    return json.loads(p.read_text())
+
+
+def roofline_row(r: dict) -> Optional[Dict]:
+    from repro.models.config import SHAPES
+
+    if r.get("status") != "ok":
+        return None
+    shape = SHAPES[r["shape"]]
+    probe = r.get("probe") or {}
+    flops = probe.get("flops") or r.get("flops")          # per-device
+    hbm_bytes = probe.get("bytes") or r.get("bytes_accessed")
+    coll = probe.get("collective_total", (r.get("collectives") or {}).get("total_bytes", 0))
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm_bytes / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    tokens = shape.tokens if shape.kind != "decode" else shape.global_batch
+    mf = model_flops(r["n_active_params"], tokens, shape.kind)
+    mf_per_dev = mf / CHIPS
+    step_time = max(terms.values())
+    useful_frac = mf_per_dev / max(flops, 1.0)
+    # compute-roofline fraction: useful model FLOPs per device over what the
+    # chip could do in the bound step time (the MFU analogue) — meaningful
+    # for train/prefill
+    frac = mf_per_dev / (step_time * PEAK_FLOPS) if step_time > 0 else 0.0
+    # bandwidth-roofline fraction: decode is weight/cache-streaming; compare
+    # the IRREDUCIBLE bytes (active params + kv cache, sharded) against the
+    # bytes the step actually moves in its bound time
+    min_bytes = 2 * r["n_active_params"] / CHIPS  # bf16 weights / device
+    m = r["memory_analysis"]
+    if shape.kind == "decode":
+        min_bytes += max(m["argument_bytes"] - min_bytes, 0)  # + cache args
+    bw_frac = (min_bytes / HBM_BW) / step_time if step_time > 0 else 0.0
+    return dict(
+        arch=r["arch"], shape=r["shape"],
+        t_compute=t_compute, t_memory=t_memory, t_collective=t_coll,
+        dominant=dominant, model_flops=mf, hlo_flops_per_dev=flops,
+        useful_ratio=useful_frac, roofline_fraction=frac,
+        bw_fraction=min(bw_frac, 1.0),
+        mem_gib=(m["argument_bytes"] + m["temp_bytes"]) / 2**30,
+        collectives_by_kind=probe.get("collective_bytes"),
+    )
+
+
+def full_table(mesh: str = "pod16x16", quant: str = "none") -> List[Dict]:
+    from repro.configs import ARCH_IDS
+    from repro.models.config import SHAPES
+
+    rows = []
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            r = load_cell(arch, shape, mesh, quant)
+            if r is None:
+                rows.append({"arch": arch, "shape": shape, "status": "missing"})
+                continue
+            if r["status"] == "skipped_inapplicable":
+                rows.append({"arch": arch, "shape": shape, "status": "skipped"})
+                continue
+            row = roofline_row(r)
+            if row is None:
+                rows.append({"arch": arch, "shape": shape, "status": "error"})
+            else:
+                row["status"] = "ok"
+                rows.append(row)
+    return rows
+
+
+def format_table(rows: List[Dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'comp(ms)':>9s} {'mem(ms)':>9s} "
+           f"{'coll(ms)':>9s} {'bound':>6s} {'useful':>7s} {'roofl%':>7s} "
+           f"{'bw%':>6s} {'GiB':>6s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r.get("status") != "ok":
+            lines.append(f"{r['arch']:24s} {r['shape']:12s} [{r['status']}]")
+            continue
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['t_compute']*1e3:9.2f} "
+            f"{r['t_memory']*1e3:9.2f} {r['t_collective']*1e3:9.2f} "
+            f"{r['dominant'][:6]:>6s} {r['useful_ratio']:7.2f} "
+            f"{r['roofline_fraction']*100:6.1f}% {r['bw_fraction']*100:5.1f}% "
+            f"{r['mem_gib']:6.1f}"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(format_table(full_table()))

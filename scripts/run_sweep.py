@@ -1,0 +1,20 @@
+"""Full dry-run sweep driver: all (arch x shape) cells, single-pod first
+(roofline source), then multi-pod (shardability proof)."""
+import sys
+import time
+
+sys.path.insert(0, "src")
+from repro.configs import ARCH_IDS
+from repro.models.config import SHAPES
+from repro.launch.dryrun import run_cell
+
+t0 = time.time()
+results = {"ok": 0, "skip": 0, "err": 0}
+for multi_pod in (False, True):
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            r = run_cell(arch, shape, multi_pod=multi_pod)
+            k = {"ok": "ok", "skipped_inapplicable": "skip"}.get(r["status"], "err")
+            results[k] += 1
+            print(f"  [{time.time()-t0:6.0f}s] {results}", flush=True)
+print("SWEEP DONE", results, flush=True)

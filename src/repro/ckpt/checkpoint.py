@@ -1,0 +1,151 @@
+"""Sharded, atomic, elastic checkpointing — pure numpy/msgpack, no orbax.
+
+Layout (one directory per step):
+    ckpt_dir/
+      step_000123/
+        meta.json            # step, pytree structure, pipeline cursor
+        shard_00000.npz      # this host's param/opt leaves (flat index keyed)
+        COMMIT               # written LAST -> crash-safe atomicity marker
+      latest                 # textfile with the newest committed step
+
+Design points for 1000+-node scale (documented; single-host here):
+  * per-host shard files — each host writes only leaves (or leaf slices) it
+    owns; restore re-shards to the CURRENT mesh (elastic: checkpoints store
+    logical arrays, the partition spec is re-derived from ShardingRules at
+    load, so restoring 2x16x16 -> 16x16 or a degraded 15-host pod works).
+  * COMMIT marker written after an fsync barrier: a checkpoint directory
+    without COMMIT is ignored and garbage-collected at the next save.
+  * the data-pipeline cursor rides in meta.json, so resume is exactly-once
+    over the token stream.
+  * saves go to a temp dir + atomic rename, so a crash mid-save never
+    corrupts the newest committed checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[list, Any]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(ckpt_dir, step: int, state, *, pipeline_cursor: Optional[Dict] = None,
+                    keep: int = 3) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    final = ckpt_dir / f"step_{step:09d}"
+    tmp = ckpt_dir / f".tmp_step_{step:09d}_{os.getpid()}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    leaves, treedef = _flatten(state)
+    arrs = {}
+    dtypes = {}
+    for i, l in enumerate(leaves):
+        a = np.asarray(l)
+        dtypes[f"leaf_{i:05d}"] = str(a.dtype)
+        if a.dtype == jnp.bfloat16:
+            a = a.view(np.uint16)  # npz cannot store ml_dtypes.bfloat16
+        arrs[f"leaf_{i:05d}"] = a
+    np.savez(tmp / "shard_00000.npz", **arrs)
+    meta = {
+        "step": step,
+        "time": time.time(),
+        "n_leaves": len(leaves),
+        "treedef": str(treedef),
+        "dtypes": dtypes,
+        "pipeline_cursor": pipeline_cursor or {},
+    }
+    (tmp / "meta.json").write_text(json.dumps(meta, indent=1))
+    # fsync barrier then commit marker then atomic rename
+    for f in tmp.iterdir():
+        with open(f, "rb") as fh:
+            os.fsync(fh.fileno())
+    (tmp / "COMMIT").write_text("ok")
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _update_latest(ckpt_dir, step)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _update_latest(ckpt_dir: Path, step: int):
+    (ckpt_dir / "latest").write_text(str(step))
+
+
+def _gc(ckpt_dir: Path, keep: int):
+    steps = sorted(committed_steps(ckpt_dir))
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(ckpt_dir / f"step_{s:09d}", ignore_errors=True)
+    # remove uncommitted debris
+    for d in ckpt_dir.glob(".tmp_step_*"):
+        shutil.rmtree(d, ignore_errors=True)
+    for d in ckpt_dir.glob("step_*"):
+        if not (d / "COMMIT").exists():
+            shutil.rmtree(d, ignore_errors=True)
+
+
+def committed_steps(ckpt_dir) -> list:
+    ckpt_dir = Path(ckpt_dir)
+    out = []
+    for d in ckpt_dir.glob("step_*"):
+        if (d / "COMMIT").exists():
+            try:
+                out.append(int(d.name.split("_")[1]))
+            except ValueError:
+                continue
+    return sorted(out)
+
+
+def latest_step(ckpt_dir) -> Optional[int]:
+    steps = committed_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(ckpt_dir, state_like, *, step: Optional[int] = None,
+                       shardings=None) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``state_like``.
+
+    ``shardings``: optional pytree of NamedShardings for the CURRENT mesh —
+    this is the elastic path: saved logical arrays are placed onto whatever
+    mesh the restarted job runs with (device_put re-shards).
+    """
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:09d}"
+    if not (d / "COMMIT").exists():
+        raise FileNotFoundError(f"checkpoint {d} not committed")
+    meta = json.loads((d / "meta.json").read_text())
+    data = np.load(d / "shard_00000.npz")
+    leaves_like, treedef = _flatten(state_like)
+    assert meta["n_leaves"] == len(leaves_like), (
+        f"checkpoint has {meta['n_leaves']} leaves, target structure has {len(leaves_like)}"
+    )
+    new_leaves = []
+    dtypes = meta.get("dtypes", {})
+    for i, like in enumerate(leaves_like):
+        key = f"leaf_{i:05d}"
+        arr = data[key]
+        if dtypes.get(key) == "bfloat16":
+            arr = arr.view(jnp.bfloat16)
+        tgt_dtype = like.dtype if hasattr(like, "dtype") else arr.dtype
+        new_leaves.append(jnp.asarray(arr, dtype=tgt_dtype))
+    state = jax.tree_util.tree_unflatten(treedef, new_leaves)
+    if shardings is not None:
+        state = jax.device_put(state, shardings)
+    return state, meta

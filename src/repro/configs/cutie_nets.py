@@ -1,0 +1,7 @@
+"""The paper's own networks as selectable configs (CutieNetConfig)."""
+from repro.models.cutie_net import CIFAR_TNN, DVS_CNN_TCN
+
+CUTIE_CONFIGS = {
+    "cutie_cifar10": CIFAR_TNN,
+    "cutie_dvs": DVS_CNN_TCN,
+}

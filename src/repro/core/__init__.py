@@ -1,0 +1,23 @@
+"""Core: the paper's contributions as composable JAX modules."""
+from repro.core.ternary import (
+    ternary_quantize_weights,
+    ternary_quantize_acts,
+    ste_ternary_weights,
+    ste_ternary_acts,
+    pack_ternary,
+    unpack_ternary,
+    packed_nbytes,
+    sparsity,
+)
+from repro.core.tcn import (
+    dilated_causal_conv1d,
+    dilated1d_via_2d,
+    wrap_time_axis,
+    project_weights_to_2d,
+    conv2d_undilated,
+    unwrap_time_axis,
+    receptive_field,
+    TCNStream,
+    stream_tcn_apply,
+)
+from repro.core import cutie_arch

@@ -1,0 +1,309 @@
+"""Analytical performance/energy model of the TCN-CUTIE silicon.
+
+The paper reports *measured* silicon numbers (Table 1, Fig. 5, Fig. 6).  We
+cannot fabricate a chip, so the reproduction target is an analytical model of
+the Kraken CUTIE instance that (a) derives cycles/ops from the architecture's
+first principles (one output pixel per cycle across all 96 OCUs, each OCU
+consuming a full 3x3xC_in window per cycle), and (b) reproduces the paper's
+reported energy/throughput corners under the standard CMOS scaling laws the
+paper itself relies on (E ~ C V^2, f ~ V).
+
+Internal consistency checks this model encodes (validated in tests):
+  * peak efficiency at 0.9 V  =  1036 * (0.5/0.9)^2  = 319.8 ~ paper's 318 TOp/s/W;
+  * 1036 / 617 (SoA [8])      =  1.68x  ~ paper's claimed 1.67x;
+  * CIFAR-10 energy ratio vs [9] 13.86 uJ and [8] 3.2 uJ.
+
+Counting conventions (documented, because silicon papers differ):
+  * ``ops_physical``: 2 * MACs (1 MAC = 2 Op, the paper's own footnote).
+  * The paper's *peak* numbers (14.9 TOp/s @ 0.5 V) imply ~276 kOp/cycle,
+    1.664x the physical datapath maximum 2*3*3*96*96 = 165,888 Op/cycle.
+    We expose this as ``KAPPA_PAPER_OPS`` and report both conventions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+# ---------------------------------------------------------------------------
+# Paper-reported constants (ground truth for validation)
+# ---------------------------------------------------------------------------
+
+PAPER = dict(
+    v_min=0.5,
+    v_max=0.9,
+    f_at_0v5_hz=54e6,
+    peak_eff_0v5_topsw=1036.0,
+    peak_eff_0v9_topsw=318.0,          # §7 text (Table 1 column lists 446)
+    peak_tput_0v5_tops=14.9,
+    peak_tput_0v9_tops=51.7,           # Fig. 6 (Table 1 headline lists 56)
+    cifar_energy_uj=2.72,
+    cifar_inf_per_s=3200.0,
+    cifar_avg_tops=5.4,
+    cifar_accuracy=0.86,
+    dvs_energy_uj=5.5,
+    dvs_inf_per_s=8000.0,
+    dvs_avg_tops=1.2,
+    dvs_accuracy=0.945,
+    power_mw=12.2,
+    area_mm2=2.96,
+    tcn_mem_bytes=576,
+    tcn_steps=24,
+    soa_binary_10nm_topsw=617.0,       # [8] Knag et al.
+    soa_binary_28nm_topsw=230.0,       # [9] BinarEye
+    soa_cifar_energy_uj=(13.86, 3.2),  # [9], [8]
+    soa_tcn_kws_topsw=(6.4, 19.2),     # [10] Giraldo et al.
+    truenorth_energy_ratio=3250.0,     # [2]
+    loihi_energy_ratio=63.4,           # [11]
+)
+
+# Physical datapath peak: 96 OCUs x (3*3*96 MACs) x 2 Op/MAC per cycle.
+OPS_PER_CYCLE_PHYSICAL = 2 * 3 * 3 * 96 * 96  # = 165_888
+# The paper's peak-throughput counting convention relative to physical 2*MACs.
+KAPPA_PAPER_OPS = (PAPER["peak_tput_0v5_tops"] * 1e12 / PAPER["f_at_0v5_hz"]) / OPS_PER_CYCLE_PHYSICAL
+
+
+@dataclasses.dataclass(frozen=True)
+class CutieHW:
+    """Kraken-instance CUTIE hardware parameters."""
+
+    n_ocu: int = 96            # output-channel compute units
+    max_cin: int = 96          # input channels consumed per cycle
+    kh: int = 3
+    kw: int = 3
+    max_fmap: int = 64         # 64 x 64 max feature map
+    tcn_steps: int = 24
+    linebuffer_prime_rows: int = 2   # rows buffered before first window
+
+    # --- electrical model, calibrated at the 0.5 V corner -----------------
+    v0: float = 0.5
+    f0_hz: float = 54e6
+    # frequency scales ~linearly with V across 0.5-0.9 V (near-threshold 22FDX):
+    # f(0.9) chosen so peak throughput matches the paper's 51.7/14.9 ratio.
+    f_slope_hz_per_v: float = (51.7 / 14.9 - 1.0) * 54e6 / 0.4
+    # dynamic energy per *physical* op at 0.5 V.  Calibrated so that the peak
+    # paper-convention efficiency is 1036 TOp/s/W:
+    #   eff_paper = KAPPA / e_op  ->  e_op = KAPPA / 1036e12  [J/op]
+    e_op_0v5_j: float = KAPPA_PAPER_OPS / (PAPER["peak_eff_0v5_topsw"] * 1e12)
+    leak_w_0v5: float = 0.15e-3   # SCM+SRAM leakage, small at 0.5 V
+
+    def freq_hz(self, v: float) -> float:
+        return self.f0_hz + (v - self.v0) * self.f_slope_hz_per_v
+
+    def e_op_j(self, v: float) -> float:
+        """Dynamic energy/op — classic C·V² scaling (validated: reproduces the
+        paper's 318 TOp/s/W at 0.9 V from 1036 at 0.5 V)."""
+        return self.e_op_0v5_j * (v / self.v0) ** 2
+
+    def leak_w(self, v: float) -> float:
+        # exponential-ish leakage growth with V; second-order for results here
+        return self.leak_w_0v5 * (v / self.v0) ** 3
+
+    @property
+    def ops_per_cycle(self) -> int:
+        return 2 * self.kh * self.kw * self.max_cin * self.n_ocu
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvLayer:
+    """One CUTIE-mappable layer (2-D conv; TCN layers arrive here already
+    mapped through core.tcn.dilated1d_to_2d, so 1-D is just KW=3 with a
+    single active column)."""
+
+    h_out: int
+    w_out: int
+    c_in: int
+    c_out: int
+    kh: int = 3
+    kw: int = 3
+    is_fc: bool = False  # FC classifier = 1x1 output conv
+
+    @property
+    def macs(self) -> int:
+        return self.h_out * self.w_out * self.kh * self.kw * self.c_in * self.c_out
+
+    @property
+    def ops(self) -> int:
+        return 2 * self.macs
+
+
+def layer_cycles(layer: ConvLayer, hw: CutieHW) -> int:
+    """CUTIE produces ALL c_out (<= n_ocu) channels of one output pixel per
+    cycle; wider layers tile over OCU/C_in groups.  The line buffer must
+    prime KH-1 rows before the first window fires."""
+    tiles = math.ceil(layer.c_out / hw.n_ocu) * math.ceil(layer.c_in / hw.max_cin)
+    prime = 0 if layer.is_fc else hw.linebuffer_prime_rows * layer.w_out
+    return tiles * (layer.h_out * layer.w_out + prime)
+
+
+def layer_utilization(layer: ConvLayer, hw: CutieHW) -> float:
+    """Fraction of the physical MAC array doing useful work — <1 when
+    c_in < 96 (e.g. the 3-channel CIFAR input layer) or c_out < 96."""
+    return layer.macs / (layer_cycles(layer, hw) * hw.ops_per_cycle / 2)
+
+
+@dataclasses.dataclass
+class NetReport:
+    name: str
+    v: float
+    f_hz: float
+    cycles: int
+    ops: int                  # physical 2*MACs
+    t_inf_s: float
+    inf_per_s: float
+    energy_j: float
+    avg_tops: float           # physical convention
+    avg_tops_paper: float     # paper convention (x KAPPA)
+    eff_topsw: float
+    eff_topsw_paper: float
+    peak_layer_eff_topsw_paper: float
+    peak_tput_tops_paper: float
+    per_layer_util: List[float]
+
+
+def evaluate_network(
+    name: str, layers: Sequence[ConvLayer], hw: CutieHW, v: float
+) -> NetReport:
+    f = hw.freq_hz(v)
+    cycles = sum(layer_cycles(l, hw) for l in layers)
+    ops = sum(l.ops for l in layers)
+    t_inf = cycles / f
+    # energy: dynamic energy on *utilized* ops + idle/leak over the inference.
+    # CUTIE clock-gates idle OCUs, so dynamic energy tracks useful ops; the
+    # datapath-level overhead (linebuffer, control) is folded into e_op by the
+    # calibration at the peak-efficiency point.
+    e_dyn = ops * hw.e_op_j(v)
+    e_leak = hw.leak_w(v) * t_inf
+    energy = e_dyn + e_leak
+    utils = [layer_utilization(l, hw) for l in layers]
+    avg_tops = ops / t_inf / 1e12
+    power = energy / t_inf
+    # peak layer: best-utilization layer at full burst rate
+    peak_util = max(utils)
+    peak_tput_paper = peak_util * hw.ops_per_cycle * f * KAPPA_PAPER_OPS / 1e12
+    # peak efficiency: dynamic-only at the best layer (paper's convention —
+    # first-layer burst, leakage amortized away)
+    peak_eff_paper = KAPPA_PAPER_OPS / hw.e_op_j(v) / 1e12
+    return NetReport(
+        name=name,
+        v=v,
+        f_hz=f,
+        cycles=cycles,
+        ops=ops,
+        t_inf_s=t_inf,
+        inf_per_s=1.0 / t_inf,
+        energy_j=energy,
+        avg_tops=avg_tops,
+        avg_tops_paper=avg_tops * KAPPA_PAPER_OPS,
+        eff_topsw=avg_tops * 1e12 / power / 1e12,
+        eff_topsw_paper=avg_tops * KAPPA_PAPER_OPS * 1e12 / power / 1e12,
+        peak_layer_eff_topsw_paper=peak_eff_paper,
+        peak_tput_tops_paper=peak_tput_paper,
+        per_layer_util=utils,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The two benchmark networks of the paper
+# ---------------------------------------------------------------------------
+
+def cifar10_9layer_layers(channels: int = 96) -> List[ConvLayer]:
+    """The 9-layer (8 conv + FC) CIFAR-10 TNN of [1]/[8]/[9], 96 channels.
+
+    VGG-like: 2x conv @32x32, pool, 3x conv @16x16, pool, 3x conv @8x8,
+    global pool + FC-10 (executed as a 1x1 'conv' on the OCU array).
+    """
+    c = channels
+    ls = [ConvLayer(32, 32, 3, c)]
+    ls += [ConvLayer(32, 32, c, c)]
+    ls += [ConvLayer(16, 16, c, c)] * 3
+    ls += [ConvLayer(8, 8, c, c)] * 3
+    ls += [ConvLayer(1, 1, c, 10, kh=4, kw=4, is_fc=True)]
+    return ls
+
+
+def dvs_cnn_layers(tcn_channels: int = 96) -> List[ConvLayer]:
+    """The 2-D CNN frontend of the hybrid network of [6] — run once per DVS
+    time step (the TCN memory caches the per-step feature vectors, so past
+    steps are never recomputed: that is precisely what the 576 B memory buys).
+    DVS128 input downsampled to 64x64, 2 polarity channels."""
+    return [
+        ConvLayer(64, 64, 2, 64),
+        ConvLayer(32, 32, 64, 64),
+        ConvLayer(16, 16, 64, 96),
+        ConvLayer(8, 8, 96, 96),
+        ConvLayer(4, 4, 96, tcn_channels),
+    ]
+
+
+def dvs_tcn_layers(tcn_channels: int = 96, t: int = 24) -> List[ConvLayer]:
+    """The 4 dilated 1-D TCN layers in their *mapped* 2-D form
+    (core.tcn.dilated1d_to_2d): a [Q=ceil(T/D), D] feature map with only the
+    middle kernel column active, dilations 1,2,4,8."""
+    ls = []
+    for d in (1, 2, 4, 8):
+        q = -(-t // d)
+        ls.append(ConvLayer(q, d, tcn_channels, tcn_channels))
+    return ls
+
+
+def dvs_cnn_tcn_layers(tcn_channels: int = 96) -> List[ConvLayer]:
+    """One full *classification* of the [6] network: the paper's network
+    processes 5 time steps, i.e. 5 CNN passes feed the TCN memory, then the
+    4-layer TCN head runs over the 24-step window."""
+    return dvs_cnn_layers(tcn_channels) * 5 + dvs_tcn_layers(tcn_channels)
+
+
+def voltage_sweep(layers: Sequence[ConvLayer], hw: CutieHW, name: str,
+                  v_lo: float = 0.5, v_hi: float = 0.9, steps: int = 9):
+    return [
+        evaluate_network(name, layers, hw, v_lo + i * (v_hi - v_lo) / (steps - 1))
+        for i in range(steps)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Calibration against the paper's measured silicon
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Calibration:
+    """Measured-vs-ideal factors.  ``cycle_overhead`` is the ratio of the
+    chip's real cycles/inference to the ideal pixel-per-cycle schedule
+    (weight (re)loads, feature-map writeback, layer reconfiguration, FC
+    serialization); ``energy_overhead`` is the ratio of the chip's *average*
+    energy/op to its *peak* (best-layer burst) energy/op.
+
+    Internal consistency: for a chip whose power while running is roughly
+    constant, the two factors must agree — and for the CIFAR-10 network they
+    do (5.1x vs 4.9x), which is the model's validation against the paper.
+    """
+
+    cycle_overhead: float
+    energy_overhead: float
+
+    @property
+    def consistent(self) -> bool:
+        return abs(self.cycle_overhead / self.energy_overhead - 1.0) < 0.25
+
+
+def calibrate(report: NetReport, paper_inf_per_s: float, paper_energy_uj: float) -> Calibration:
+    return Calibration(
+        cycle_overhead=report.inf_per_s / paper_inf_per_s,
+        energy_overhead=(paper_energy_uj * 1e-6) / report.energy_j,
+    )
+
+
+def apply_calibration(report: NetReport, cal: Calibration) -> NetReport:
+    """Project the ideal report onto measured-silicon behaviour."""
+    return dataclasses.replace(
+        report,
+        cycles=int(report.cycles * cal.cycle_overhead),
+        t_inf_s=report.t_inf_s * cal.cycle_overhead,
+        inf_per_s=report.inf_per_s / cal.cycle_overhead,
+        energy_j=report.energy_j * cal.energy_overhead,
+        avg_tops=report.avg_tops / cal.cycle_overhead,
+        avg_tops_paper=report.avg_tops_paper / cal.cycle_overhead,
+        eff_topsw=report.eff_topsw / cal.energy_overhead,
+        eff_topsw_paper=report.eff_topsw_paper / cal.energy_overhead,
+    )

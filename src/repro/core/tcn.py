@@ -1,0 +1,198 @@
+"""TCN extensions — the paper's §4, implemented exactly.
+
+Two pieces:
+
+1. ``dilated_causal_conv1d`` — the reference semantics, Eq. (1):
+
+       (w * x)[n] = sum_{k=1..N}  x~[n - (k-1)·D] · w[N-k]
+
+   with x~ the causally zero-padded input.
+
+2. ``dilated1d_to_2d`` — the paper's mapping of a dilated 1-D convolution to
+   an *undilated* 2-D convolution (Eq. 2 / Fig. 3), so the 2-D engine
+   (CUTIE's OCU array — here, the Pallas conv kernel) executes TCN layers at
+   full efficiency with zero data marshalling at runtime:
+
+       z[q, m] = x~[q·D + m]            (wrap the time axis modulo D)
+       (w * x)[n] = sum_k z[q-(k-1), m] · w[N-k],   n = q·D + m
+
+   The 1-D kernel of length N <= KH is projected into the *middle column* of
+   a KH x 3 2-D kernel; all other entries are zero, so the dot product only
+   runs down one column and column m of the output holds phase m of the time
+   index.  Both transforms (input reshape, weight projection) are offline /
+   marshalling-free, exactly as in the paper.
+
+3. ``TCNStream`` — the TCN memory: the silicon uses a 24-time-step, 576 B
+   flip-flop shift register holding the 1-D feature vectors produced by the
+   2-D CNN frontend.  The JAX analogue is a ring buffer updated in place
+   (donated ``dynamic_update_slice``) — functionally a KV-cache for TCNs.
+
+Shapes: x is [B, T, C_in]; 1-D weights are [N, C_in, C_out] (tap k=0 is the
+oldest tap, matching w[N-k] in Eq. 1 where k=N hits x~[n - (N-1)D]).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# Reference: Eq. (1)
+# ---------------------------------------------------------------------------
+
+def dilated_causal_conv1d(x: jax.Array, w: jax.Array, dilation: int) -> jax.Array:
+    """Causal dilated 1-D convolution, the literal Eq. (1).
+
+    x: [B, T, C_in], w: [N, C_in, C_out] -> [B, T, C_out].
+    """
+    n_taps = w.shape[0]
+    pad = (n_taps - 1) * dilation
+    # lax.conv_general_dilated computes cross-correlation:
+    #   y[n] = sum_j x[n - pad + j*D] w[j]
+    # with pad = (N-1)*D this is y[n] = sum_j x[n - (N-1-j)*D] w[j]; substituting
+    # k = N - j gives exactly Eq. (1)'s sum_k x[n-(k-1)D] w[N-k].
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1,),
+        padding=[(pad, 0)],
+        rhs_dilation=(dilation,),
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    )
+
+
+def receptive_field(n_taps: int, dilations) -> int:
+    """f = 1 + sum_i (N-1) * D_i  (paper's receptive-field formula)."""
+    return 1 + sum((n_taps - 1) * d for d in dilations)
+
+
+# ---------------------------------------------------------------------------
+# The mapping: dilated 1-D  ->  undilated 2-D (Eq. 2 / Fig. 3)
+# ---------------------------------------------------------------------------
+
+def wrap_time_axis(x: jax.Array, dilation: int) -> jax.Array:
+    """z[b, q, m, c] = x~[b, q*D + m, c]  — the offline input transform.
+
+    Pads T up to a multiple of D with zeros (those positions only influence
+    outputs at n >= T, which the caller drops).  [B,T,C] -> [B, ceil(T/D), D, C].
+    """
+    b, t, c = x.shape
+    t_pad = -(-t // dilation) * dilation
+    if t_pad != t:
+        x = jnp.pad(x, ((0, 0), (0, t_pad - t), (0, 0)))
+    return x.reshape(b, t_pad // dilation, dilation, c)
+
+
+def project_weights_to_2d(w: jax.Array, kh: int = 3, kw: int = 3) -> jax.Array:
+    """Project the 1-D kernel [N, C_in, C_out] into the middle column of a
+    [KH, KW, C_in, C_out] 2-D kernel (other columns zero) — the paper's
+    hardware-constraint-respecting weight transform.
+
+    Tap placement: with causal row padding of (KH-1, 0), row r of the 2-D
+    kernel touches z[q - (KH-1) + r].  Eq. (1) needs z[q - j]·w[N-1-j] for
+    j = 0..N-1, i.e. rows r = KH-1-j carry w[N-1-j]: the 1-D kernel occupies
+    the *bottom* N rows of the middle column in original order.
+    """
+    n_taps, c_in, c_out = w.shape
+    if n_taps > kh:
+        raise ValueError(f"kernel taps {n_taps} exceed 2-D kernel height {kh}")
+    k2d = jnp.zeros((kh, kw, c_in, c_out), dtype=w.dtype)
+    mid = kw // 2
+    return k2d.at[kh - n_taps :, mid, :, :].set(w)
+
+
+def conv2d_undilated(z: jax.Array, k2d: jax.Array) -> jax.Array:
+    """The undilated 2-D convolution the engine actually runs.
+
+    z: [B, Q, D, C_in] (wrapped feature map), k2d: [KH, KW, C_in, C_out].
+    Causal on the row (q) axis — pad (KH-1, 0); zero 'same' pad on the column
+    (phase) axis — the kernel's only nonzero column is the middle one, so
+    column padding never mixes phases (it multiplies zeros of the kernel).
+    """
+    kh, kw = k2d.shape[0], k2d.shape[1]
+    return lax.conv_general_dilated(
+        z,
+        k2d,
+        window_strides=(1, 1),
+        padding=[(kh - 1, 0), (kw // 2, kw // 2)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def unwrap_time_axis(y2d: jax.Array, t: int) -> jax.Array:
+    """[B, Q, D, C] -> [B, T, C], inverse of wrap_time_axis (drop tail pad)."""
+    b, q, d, c = y2d.shape
+    return y2d.reshape(b, q * d, c)[:, :t, :]
+
+
+def dilated1d_via_2d(
+    x: jax.Array, w: jax.Array, dilation: int, *, kh: int = 3, kw: int = 3
+) -> jax.Array:
+    """End-to-end mapped path: MUST equal dilated_causal_conv1d exactly.
+
+    This is the paper's scheduling algorithm: the runtime only ever executes
+    an undilated KHxKW 2-D convolution (the shape CUTIE's datapath — and our
+    Pallas conv kernel — is built for).
+    """
+    t = x.shape[1]
+    z = wrap_time_axis(x, dilation)
+    k2d = project_weights_to_2d(w, kh=kh, kw=kw)
+    y = conv2d_undilated(z, k2d)
+    return unwrap_time_axis(y, t)
+
+
+# ---------------------------------------------------------------------------
+# TCN memory — streaming ring buffer (the 576-byte shift register)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TCNStream:
+    """Ring-buffer state holding the last ``T`` feature vectors.
+
+    Silicon: 24 steps x 96 ch x 2 bit = 576 B of SCM.  Here: [T, C] (or
+    [B, T, C]) array + scalar write cursor; ``push`` is O(1) in-place.
+    """
+
+    buf: jax.Array  # [..., T, C]
+    cursor: jax.Array  # int32 scalar — next write slot
+
+    @staticmethod
+    def create(n_steps: int, channels: int, batch: Optional[int] = None, dtype=jnp.float32) -> "TCNStream":
+        shape = (n_steps, channels) if batch is None else (batch, n_steps, channels)
+        return TCNStream(buf=jnp.zeros(shape, dtype), cursor=jnp.zeros((), jnp.int32))
+
+    @property
+    def n_steps(self) -> int:
+        return self.buf.shape[-2]
+
+    def push(self, v: jax.Array) -> "TCNStream":
+        """Insert one feature vector ([..., C]) at the cursor, advance."""
+        buf = lax.dynamic_update_index_in_dim(self.buf, v, self.cursor, axis=-2)
+        return TCNStream(buf=buf, cursor=(self.cursor + 1) % self.n_steps)
+
+    def ordered(self) -> jax.Array:
+        """Time-ordered view, oldest first — what the TCN layers consume.
+
+        The silicon multiplexes three time steps by the address of the first
+        required pixel; a roll gives the same contiguous view.
+        """
+        return jnp.roll(self.buf, -self.cursor, axis=-2)
+
+
+def stream_tcn_apply(stream: TCNStream, tcn_fn) -> jax.Array:
+    """Run a TCN head over the time-ordered buffer contents.
+
+    ``tcn_fn`` maps [B?, T, C] -> [B?, n_classes]; mirrors the silicon flow
+    where each new 2-D CNN inference triggers a full TCN pass over the
+    24-step window.
+    """
+    x = stream.ordered()
+    if x.ndim == 2:
+        x = x[None]
+        return tcn_fn(x)[0]
+    return tcn_fn(x)

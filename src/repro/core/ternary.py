@@ -1,0 +1,161 @@
+"""Ternary quantization core — the paper's compute paradigm.
+
+TCN-CUTIE computes with weights AND activations in {-1, 0, +1}.  This module
+provides:
+
+  * ``ternary_quantize_weights`` — TWN-style threshold quantizer (Li & Liu,
+    2016), the standard training recipe for CUTIE-class networks: per-channel
+    threshold ``delta = nu * mean(|w|)`` and scale ``alpha = mean(|w| : |w|>delta)``.
+  * ``ternary_quantize_acts`` — symmetric activation ternarizer with a
+    configurable threshold (CUTIE applies it after conv+BN, folded offline).
+  * Straight-through estimators (STE) for QAT: the forward pass sees the
+    quantized value, the backward pass passes gradients through clipped.
+  * 2-bit packing/unpacking.  On the TPU the transferable win of ternary is
+    *memory traffic*: a ternary weight is 2 bits, so an [K, N] weight matrix
+    moves HBM->VMEM at bf16/8 of the cost.  ``pack_ternary``/``unpack_ternary``
+    implement the codec used by the Pallas kernels (kernels/ternary_matmul.py).
+
+Encoding: t in {-1,0,+1}  ->  (t+1) in {0,1,2}, 2 bits each, 4 values/byte,
+value ``i`` in bits ``2i..2i+1`` (little-endian within the byte).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+TERNARY_NU_DEFAULT = 0.7  # TWN threshold factor (0.7 * E|w|)
+
+
+# ---------------------------------------------------------------------------
+# Quantizers
+# ---------------------------------------------------------------------------
+
+def ternary_quantize_weights(
+    w: jax.Array,
+    *,
+    nu: float = TERNARY_NU_DEFAULT,
+    axis=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """TWN quantizer.  Returns ``(t, alpha)`` with ``t`` in {-1,0,1} (int8)
+    and ``alpha`` the positive per-group scale so that ``w ~= alpha * t``.
+
+    ``axis``: axes to *reduce* over when computing the threshold/scale
+    (None = whole tensor).  For a [K, N] matmul weight use ``axis=0`` to get a
+    per-output-channel scale, matching CUTIE's per-OCU scaling.
+    """
+    absw = jnp.abs(w)
+    delta = nu * jnp.mean(absw, axis=axis, keepdims=axis is not None)
+    mask = absw > delta
+    t = jnp.where(mask, jnp.sign(w), 0.0)
+    # alpha = mean |w| over the surviving entries (avoid div by zero)
+    num = jnp.sum(jnp.where(mask, absw, 0.0), axis=axis, keepdims=axis is not None)
+    den = jnp.maximum(jnp.sum(mask, axis=axis, keepdims=axis is not None), 1)
+    alpha = num / den
+    return t.astype(jnp.int8), alpha.astype(w.dtype)
+
+
+def ternary_quantize_acts(x: jax.Array, *, threshold: float = 0.5) -> jax.Array:
+    """CUTIE activation ternarizer: sign(x) where |x| > threshold else 0.
+
+    In the silicon the threshold comparison is folded with batch-norm into two
+    per-channel comparators; here we keep the canonical float form.
+    Returns the same dtype as ``x`` with values in {-1, 0, +1}.
+    """
+    return jnp.where(jnp.abs(x) > threshold, jnp.sign(x), 0.0).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through estimators (QAT)
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def ste_ternary_weights(w: jax.Array, nu: float) -> jax.Array:
+    """Forward: alpha * ternary(w).  Backward: identity on w (clipped)."""
+    t, alpha = ternary_quantize_weights(w, nu=nu, axis=None)
+    return alpha * t.astype(w.dtype)
+
+
+def _stw_fwd(w, nu):
+    return ste_ternary_weights(w, nu), (w,)
+
+
+def _stw_bwd(res, g):
+    (w,) = res
+    # pass-through inside [-1, 1]*max|w| band; zero outside (standard clip-STE)
+    bound = jnp.maximum(jnp.max(jnp.abs(w)), 1e-6)
+    return (jnp.where(jnp.abs(w) <= bound, g, 0.0), None)
+
+
+ste_ternary_weights.defvjp(_stw_fwd, _stw_bwd)
+
+
+@jax.custom_vjp
+def ste_ternary_acts(x: jax.Array, threshold: float) -> jax.Array:
+    return ternary_quantize_acts(x, threshold=threshold)
+
+
+def _sta_fwd(x, threshold):
+    return ste_ternary_acts(x, threshold), (x, threshold)
+
+
+def _sta_bwd(res, g):
+    x, threshold = res
+    # hard-tanh style STE window: gradient flows where |x| <= 2*threshold + 1
+    return (jnp.where(jnp.abs(x) <= (2.0 * threshold + 1.0), g, 0.0), None)
+
+
+ste_ternary_acts.defvjp(_sta_fwd, _sta_bwd)
+
+
+# ---------------------------------------------------------------------------
+# 2-bit packing codec
+# ---------------------------------------------------------------------------
+
+def pack_ternary(t: jax.Array, axis: int = -1) -> jax.Array:
+    """Pack a {-1,0,1} int array into uint8, 4 values per byte along ``axis``.
+
+    The packed axis length must be a multiple of 4 (pad upstream with zeros —
+    zero is a valid ternary value and contributes nothing to dot products).
+    """
+    t = jnp.asarray(t)
+    axis = axis % t.ndim
+    if t.shape[axis] % 4 != 0:
+        raise ValueError(f"pack axis length {t.shape[axis]} not a multiple of 4")
+    u = (t.astype(jnp.int8) + 1).astype(jnp.uint8)  # {0,1,2}
+    u = jnp.moveaxis(u, axis, -1)
+    u = u.reshape(*u.shape[:-1], u.shape[-1] // 4, 4)
+    shifts = jnp.array([0, 2, 4, 6], dtype=jnp.uint8)
+    packed = jnp.sum(u << shifts, axis=-1).astype(jnp.uint8)
+    return jnp.moveaxis(packed, -1, axis)
+
+
+def unpack_ternary(p: jax.Array, axis: int = -1, *, dtype=jnp.int8) -> jax.Array:
+    """Inverse of :func:`pack_ternary`; returns values in {-1,0,1}."""
+    p = jnp.asarray(p)
+    axis = axis % p.ndim
+    p = jnp.moveaxis(p, axis, -1)
+    shifts = jnp.array([0, 2, 4, 6], dtype=jnp.uint8)
+    u = (p[..., None] >> shifts) & jnp.uint8(3)  # [..., K//4, 4]
+    u = u.reshape(*u.shape[:-2], u.shape[-2] * 4)
+    t = u.astype(jnp.int8) - 1
+    return jnp.moveaxis(t.astype(dtype), -1, axis)
+
+
+def packed_nbytes(shape, axis: int = -1) -> int:
+    """Bytes of the packed representation of a ternary tensor of ``shape``."""
+    shape = list(shape)
+    axis = axis % len(shape)
+    shape[axis] = -(-shape[axis] // 4)  # ceil div
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+def sparsity(t: jax.Array) -> jax.Array:
+    """Fraction of exact zeros — CUTIE translates this into toggling savings;
+    we report it and exploit it in gradient compression (optim/compress.py)."""
+    return jnp.mean((t == 0).astype(jnp.float32))

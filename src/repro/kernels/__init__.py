@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the perf-critical ternary compute.
+
+Each kernel has: <name>.py (pl.pallas_call + BlockSpec), a jit'd public
+wrapper in ops.py, and a pure-jnp oracle in ref.py.  On CPU they run in
+interpret mode; the BlockSpecs target TPU v5e VMEM/MXU dimensioning.
+"""
+from repro.kernels.ops import (
+    ternary_matmul,
+    ternary_conv2d,
+    quantize_pack_matmul_weights,
+    quantize_pack_conv_weights,
+)
+from repro.kernels import ref

@@ -1,0 +1,118 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+Handle: arbitrary leading batch dims, padding to block multiples, automatic
+interpret-mode on CPU (the kernels TARGET TPU; on this container they execute
+via the Pallas interpreter for correctness), and a quantize+pack convenience.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ternary import pack_ternary, ternary_quantize_weights
+from repro.kernels.ternary_matmul import ternary_matmul_pallas
+from repro.kernels.ternary_conv2d import ternary_conv2d_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def quantize_pack_matmul_weights(w: jax.Array, nu: float = 0.7) -> Tuple[jax.Array, jax.Array]:
+    """[K, N] float -> ([ceil(K/4), N] uint8 packed, [N] scale)."""
+    t, alpha = ternary_quantize_weights(w, nu=nu, axis=0)
+    k = t.shape[0]
+    k_pad = -(-k // 4) * 4
+    if k_pad != k:
+        t = jnp.pad(t, ((0, k_pad - k), (0, 0)))
+    return pack_ternary(t, axis=0), alpha.reshape(-1)
+
+
+def quantize_pack_conv_weights(w: jax.Array, nu: float = 0.7) -> Tuple[jax.Array, jax.Array]:
+    """[KH, KW, C_in, C_out] float -> packed along C_in + per-C_out scale."""
+    t, alpha = ternary_quantize_weights(w, nu=nu, axis=(0, 1, 2))
+    c_in = t.shape[2]
+    c_pad = -(-c_in // 4) * 4
+    if c_pad != c_in:
+        t = jnp.pad(t, ((0, 0), (0, 0), (0, c_pad - c_in), (0, 0)))
+    return pack_ternary(t, axis=2), alpha.reshape(-1)
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
+def ternary_matmul(
+    x: jax.Array,
+    w_packed: jax.Array,
+    scale: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    interpret: bool | None = None,
+):
+    """y[..., N] = x[..., K] @ unpack(w_packed)[K, N] * scale[N]."""
+    if interpret is None:
+        interpret = _on_cpu()
+    *lead, k = x.shape
+    k4, n = w_packed.shape
+    assert 4 * k4 >= k, (k, k4)
+    x2 = x.reshape(-1, k)
+    m = x2.shape[0]
+    # pad M to block_m, K to 4*k4 then to block_k, N to block_n
+    x2 = _pad_to(_pad_to(x2, 1, 1), 0, block_m)
+    if 4 * k4 != k:
+        x2 = jnp.pad(x2, ((0, 0), (0, 4 * k4 - k)))
+    bk = min(block_k, 4 * k4)
+    bk -= bk % 4
+    x2 = _pad_to(x2, 1, bk)
+    wp = _pad_to(w_packed, 0, bk // 4)
+    wp = _pad_to(wp, 1, block_n)
+    sc = _pad_to(scale.reshape(-1), 0, block_n)
+    bm = min(block_m, x2.shape[0])
+    y = ternary_matmul_pallas(
+        x2, wp, sc, block_m=bm, block_n=min(block_n, wp.shape[1]),
+        block_k=bk, interpret=interpret, out_dtype=x.dtype,
+    )
+    return y[:m, :n].reshape(*lead, n)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_cout", "fuse_ternary", "threshold", "interpret")
+)
+def ternary_conv2d(
+    x: jax.Array,
+    w_packed: jax.Array,
+    scale: jax.Array,
+    *,
+    block_cout: int = 128,
+    fuse_ternary: bool = False,
+    threshold: float = 0.5,
+    interpret: bool | None = None,
+):
+    """SAME ternary conv over [B, H, W, C_in]."""
+    if interpret is None:
+        interpret = _on_cpu()
+    kh, kw, c4, c_out = w_packed.shape
+    c_in = x.shape[-1]
+    if 4 * c4 != c_in:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, 4 * c4 - c_in)))
+    bc = min(block_cout, c_out)
+    wp = _pad_to(w_packed, 3, bc)
+    sc = _pad_to(scale.reshape(-1), 0, bc)
+    y = ternary_conv2d_pallas(
+        x, wp, sc, block_cout=bc, fuse_ternary=fuse_ternary,
+        threshold=threshold, interpret=interpret, out_dtype=x.dtype,
+    )
+    return y[..., :c_out]

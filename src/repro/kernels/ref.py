@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the semantics; kernels must match them allclose (bit-exact for
+ternary integer data).  Tests sweep shapes/dtypes against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ternary import unpack_ternary
+
+
+def ternary_matmul_ref(x: jax.Array, w_packed: jax.Array, scale: jax.Array) -> jax.Array:
+    """y = x @ unpack(w_packed) * scale   (scale broadcast over N)."""
+    w = unpack_ternary(w_packed, axis=0).astype(jnp.float32)
+    y = jnp.dot(x.astype(jnp.float32), w) * scale.reshape(1, -1).astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def ternary_conv2d_ref(
+    x: jax.Array,
+    w_packed: jax.Array,
+    scale: jax.Array,
+    *,
+    fuse_ternary: bool = False,
+    threshold: float = 0.5,
+) -> jax.Array:
+    """SAME conv with ternary packed weights [KH,KW,C_in/4,C_out] + scale."""
+    w = unpack_ternary(w_packed, axis=2).astype(jnp.float32)
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) * scale.reshape(1, 1, 1, -1).astype(jnp.float32)
+    if fuse_ternary:
+        y = jnp.where(jnp.abs(y) > threshold, jnp.sign(y), 0.0)
+    return y.astype(x.dtype)

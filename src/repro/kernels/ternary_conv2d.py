@@ -1,0 +1,113 @@
+"""Ternary 3x3 conv2d Pallas kernel — the CUTIE OCU array on a TPU.
+
+CUTIE's datapath: a line buffer holds a 3-row window of the (SAME-padded)
+input feature map; every cycle, all 96 OCUs consume the full 3x3xC_in window
+of one output pixel.  The TPU translation keeps the *whole padded image* of
+one sample resident in VMEM (CUTIE's maximum 64x64x96 map is ~0.8 MB in bf16
+— comfortably VMEM-sized; that is exactly why the silicon could afford
+all-on-chip feature maps, and the same dimensioning argument holds here),
+and expresses the window reuse as 9 shifted [H*W, C_in] x [C_in, bn] MXU
+matmuls accumulated output-stationary in a VMEM scratch tile.
+
+Weights arrive 2-bit packed along C_in: [KH, KW, C_in/4, C_out] uint8 — the
+per-output-tile weight traffic is KH*KW*C_in*bn/4 bytes, once.
+
+The fused epilogue optionally applies CUTIE's activation ternarization
+(sign/threshold), which the silicon folds into the OCU pipeline after the
+adder tree — so a whole TNN layer is a single kernel launch.
+
+TCN layers arrive here already *mapped* (core.tcn.dilated1d_to_2d): the same
+kernel executes dilated 1-D convolutions with zero marshalling, exactly the
+paper's scheduling contribution.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_SHIFTS = (0, 2, 4, 6)
+
+
+def _unpack_w(wp: jax.Array, dtype) -> jax.Array:
+    """[KH, KW, C4, bn] uint8 -> [KH, KW, 4*C4, bn] ternary in ``dtype``."""
+    kh, kw, c4, bn = wp.shape
+    parts = [((wp >> s) & jnp.uint8(3)).astype(jnp.int8) - jnp.int8(1) for s in _SHIFTS]
+    w = jnp.stack(parts, axis=3)  # (kh, kw, c4, 4, bn)
+    return w.reshape(kh, kw, c4 * 4, bn).astype(dtype)
+
+
+def _tconv_kernel(
+    x_ref, wp_ref, scale_ref, o_ref, acc_ref, *, h: int, w: int, kh: int, kw: int,
+    fuse_ternary: bool, threshold: float,
+):
+    """One (sample, output-channel-tile) grid cell: full-image conv."""
+    c_in = x_ref.shape[-1]
+    bn = o_ref.shape[-1]
+    wt = _unpack_w(wp_ref[...], jnp.float32)
+
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    # 9 shifted matmuls == the line-buffer window walk, output-stationary.
+    for dy in range(kh):
+        for dx in range(kw):
+            xs = x_ref[0, dy : dy + h, dx : dx + w, :].reshape(h * w, c_in)
+            acc_ref[...] += jax.lax.dot_general(
+                xs.astype(jnp.float32),
+                wt[dy, dx],
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+
+    y = acc_ref[...] * scale_ref[...].astype(jnp.float32)
+    if fuse_ternary:
+        y = jnp.where(jnp.abs(y) > threshold, jnp.sign(y), 0.0)
+    o_ref[...] = y.reshape(1, h, w, bn).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_cout", "interpret", "fuse_ternary", "threshold", "out_dtype"),
+)
+def ternary_conv2d_pallas(
+    x: jax.Array,
+    w_packed: jax.Array,
+    scale: jax.Array,
+    *,
+    block_cout: int = 128,
+    fuse_ternary: bool = False,
+    threshold: float = 0.5,
+    interpret: bool = True,
+    out_dtype=None,
+):
+    """SAME ternary conv.  x: [B, H, W, C_in] (unpadded), w_packed:
+    [KH, KW, C_in/4, C_out] uint8, scale: [C_out].  C_out must be a multiple
+    of ``block_cout`` (ops.py pads)."""
+    b, h, w, c_in = x.shape
+    kh, kw, c4, c_out = w_packed.shape
+    assert c_in == 4 * c4, (c_in, c4)
+    assert c_out % block_cout == 0
+    out_dtype = out_dtype or x.dtype
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
+    scale = scale.reshape(1, c_out)
+
+    kern = functools.partial(
+        _tconv_kernel, h=h, w=w, kh=kh, kw=kw,
+        fuse_ternary=fuse_ternary, threshold=threshold,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(b, c_out // block_cout),
+        in_specs=[
+            pl.BlockSpec((1, h + kh - 1, w + kw - 1, c_in), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, c4, block_cout), lambda i, j: (0, 0, 0, j)),
+            pl.BlockSpec((1, block_cout), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, h, w, block_cout), lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, h, w, c_out), out_dtype),
+        scratch_shapes=[pltpu.VMEM((h * w, block_cout), jnp.float32)],
+        interpret=interpret,
+    )(xp, w_packed, scale)

@@ -1,0 +1,387 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+
+"""Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers, compiles,
+fits, and report its roofline inputs — without TPU hardware.
+
+For each cell:
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=...).lower(**input_specs(...))
+        compiled = lowered.compile()
+        memory_analysis()   -> bytes/device (fits < 16 GB HBM of v5e)
+        cost_analysis()     -> HLO FLOPs / bytes for the roofline
+        compiled.as_text()  -> collective operand bytes (all-gather/all-reduce/
+                               reduce-scatter/all-to-all/collective-permute)
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json; the roofline
+table (benchmarks/roofline.py, EXPERIMENTS.md) is built from these artifacts.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.sharding import ShardingRules, rules_for_cell
+from repro.launch.steps import (
+    input_specs,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    train_state_specs,
+)
+from repro.models.config import SHAPES
+from repro.optim.adamw import AdamWConfig
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective kind from (S)HLO text.
+
+    Shapes in SPMD HLO are per-device; 'bytes' here = per-device data touched
+    by each collective issue, the quantity the ICI roofline term wants.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    # e.g.:  %ar = bf16[16,2048]{1,0} all-reduce(...)
+    #        %t  = (f32[8,4]{1,0}, f32[8,4]{1,0}) all-to-all(...)
+    pat = re.compile(
+        r"=\s*(\(?)([a-z0-9_,\[\]{}\s]*?)\s+(" + "|".join(_COLLECTIVES) + r")(-start|-done)?\("
+    )
+    shape_pat = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+    for line in hlo_text.splitlines():
+        m = pat.search(line)
+        if not m:
+            continue
+        kind, phase = m.group(3), m.group(4)
+        if phase == "-done":
+            continue  # counted at -start
+        nbytes = 0
+        for dt, dims in shape_pat.findall(m.group(2)):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind] += nbytes
+        counts[kind] += 1
+    out_total = sum(out.values())
+    return {"bytes_by_kind": out, "counts": counts, "total_bytes": out_total}
+
+
+def _spec_leaves_to_shardings(mesh, tree_specs):
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), tree_specs)
+
+
+def accum_for(cfg, shape) -> int:
+    """Gradient-accumulation microbatching for the big trains: global batch
+    stays 256, activations scale with the microbatch.  (The standard
+    production fit knob; probes inherit it so cost extrapolation matches.)"""
+    if shape.kind != "train":
+        return 1
+    if cfg.d_model >= 6144 and cfg.is_moe:
+        return 8   # dbrx-132b: optimizer state alone is 6 GiB/device
+    if cfg.ssm_state and cfg.d_model >= 4096:
+        return 8   # jamba: SSD keeps [B,T,H,P] tensors live per layer
+    if cfg.d_model >= 6144:
+        return 4
+    if cfg.ssm_state or cfg.d_model >= 5120:
+        return 2
+    return 1
+
+
+def build_cell(cfg, shape, mesh, *, force_accum: int | None = None,
+               sharding_opts: dict | None = None):
+    """Returns (step_fn, args, in_shardings, donate_argnums, out_shardings)."""
+    rules = rules_for_cell(mesh, cfg, shape, **(sharding_opts or {}))
+    shard = rules.make_shard_fn()
+    specs = input_specs(cfg, shape)
+    ba = rules.logical["batch"]
+
+    def batch_shardings(batch_spec):
+        def f(path, leaf):
+            name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+            if name in ("tokens", "targets"):
+                return NamedSharding(mesh, P(ba, None))
+            return NamedSharding(mesh, P(ba, None, None))  # frontend/enc embeds
+
+        return jax.tree_util.tree_map_with_path(f, batch_spec)
+
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    logits_sharding = NamedSharding(
+        mesh, P(ba, "model" if cfg.vocab_size % model_size == 0 else None)
+    )
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        accum = force_accum if force_accum is not None else accum_for(cfg, shape)
+        step = make_train_step(cfg, opt_cfg, shard=shard, accum_steps=accum)
+        state_spec = train_state_specs(cfg)
+        state_shardings = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s),
+            rules.param_pspecs(state_spec),
+        )
+        args = (state_spec, specs["batch"])
+        in_shardings = (state_shardings, batch_shardings(specs["batch"]))
+        return step, args, in_shardings, (0,), (state_shardings, None)  # donate state
+
+    # params in bf16 for inference cells
+    import repro.models.model as M
+
+    param_spec = jax.eval_shape(
+        lambda k: M.init_params(cfg, k, dtype=jnp.bfloat16), jax.random.PRNGKey(0)
+    )
+    param_shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), rules.param_pspecs(param_spec)
+    )
+    if shape.kind == "prefill":
+        from repro.launch.steps import prefill_cache_len
+        from repro.models.model import cache_spec as _cache_spec
+
+        step = make_prefill_step(cfg, shape.seq_len, shard=shard)
+        args = (param_spec, specs["batch"])
+        in_shardings = (param_shardings, batch_shardings(specs["batch"]))
+        # the cache is CREATED in-step: without out_shardings the 80-layer
+        # internvl2 cache came back only batch-sharded (20 GiB/device)
+        cspec = _cache_spec(cfg, shape.global_batch,
+                            prefill_cache_len(cfg, shape.seq_len), jnp.bfloat16)
+        out_shardings = (
+            logits_sharding,                               # last-token logits [B, V]
+            rules.cache_shardings(cspec, cfg),
+        )
+        return step, args, in_shardings, (), out_shardings
+
+    step = make_decode_step(cfg, shard=shard)
+    cache_shardings = rules.cache_shardings(specs["cache"], cfg)
+    tok_sharding = NamedSharding(mesh, P(ba, None))
+    args = (param_spec, specs["tokens"], specs["cache"])
+    in_shardings = (param_shardings, tok_sharding, cache_shardings)
+    out_shardings = (logits_sharding, cache_shardings)
+    return step, args, in_shardings, (2,), out_shardings  # donate cache
+
+
+def probe_configs(cfg):
+    """Two reduced-depth UNROLLED configs (p1, p2) + the unit count of the
+    full model, for linear extrapolation of per-layer costs.
+
+    cost_analysis counts a while (scan) body ONCE regardless of trip count;
+    probes unroll their scans so every layer is counted, then
+        total = f(p1) + (units_full - units_p1) * (f(p2) - f(p1)).
+    Probe sharding/input shapes are identical to the full cell.
+    """
+    import dataclasses as dc
+
+    if cfg.is_hybrid:
+        per = cfg.attn_layer_period
+        p1 = dc.replace(cfg, n_layers=per, scan_unroll=True)
+        p2 = dc.replace(cfg, n_layers=2 * per, scan_unroll=True)
+        return p1, p2, cfg.n_layers // per, 1
+    if cfg.is_encdec:
+        assert cfg.n_layers == cfg.n_enc_layers
+        p1 = dc.replace(cfg, n_layers=1, n_enc_layers=1, scan_unroll=True)
+        p2 = dc.replace(cfg, n_layers=2, n_enc_layers=2, scan_unroll=True)
+        return p1, p2, cfg.n_layers, 1
+    if cfg.first_dense_layers:
+        fd = cfg.first_dense_layers
+        p1 = dc.replace(cfg, n_layers=fd + 1, scan_unroll=True)
+        p2 = dc.replace(cfg, n_layers=fd + 2, scan_unroll=True)
+        return p1, p2, cfg.n_layers - fd, 1
+    p1 = dc.replace(cfg, n_layers=1, scan_unroll=True)
+    p2 = dc.replace(cfg, n_layers=2, scan_unroll=True)
+    return p1, p2, cfg.n_layers, 1
+
+
+def _compile_cell(cfg, shape, mesh, sharding_opts=None):
+    # probes force accum=1: the gradient-accumulation microbatch scan is a
+    # while loop whose body cost_analysis counts once (measured: dbrx train
+    # FLOPs undercounted 8x -> useful_ratio 11.0)
+    step, args, in_shardings, donate, out_shardings = build_cell(
+        cfg, shape, mesh, force_accum=1, sharding_opts=sharding_opts
+    )
+    lowered = jax.jit(step, in_shardings=in_shardings, out_shardings=out_shardings,
+                      donate_argnums=donate).lower(*args)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    return compiled, cost
+
+
+def probe_extrapolate(cfg, shape, mesh, sharding_opts=None) -> dict:
+    """Extrapolated whole-model FLOPs / bytes / collective bytes."""
+    p1, p2, units_full, units_p1 = probe_configs(cfg)
+    out = {}
+    vals = []
+    for p in (p1, p2):
+        compiled, cost = _compile_cell(p, shape, mesh, sharding_opts)
+        coll = parse_collective_bytes(compiled.as_text())
+        vals.append({
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": coll["bytes_by_kind"],
+            "coll_total": coll["total_bytes"],
+        })
+    mult = units_full - units_p1
+
+    def ext(a, b):
+        return a + mult * (b - a)
+
+    out["flops"] = ext(vals[0]["flops"], vals[1]["flops"])
+    out["bytes"] = ext(vals[0]["bytes"], vals[1]["bytes"])
+    out["collective_bytes"] = {
+        k: ext(vals[0]["coll"][k], vals[1]["coll"][k]) for k in vals[0]["coll"]
+    }
+    out["collective_total"] = ext(vals[0]["coll_total"], vals[1]["coll_total"])
+    out["probe_raw"] = vals
+    out["units_full"] = units_full
+    return out
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             quant: str = "none", force: bool = False, verbose: bool = True,
+             variant: str = "", overrides: dict | None = None,
+             sharding_opts: dict | None = None) -> dict:
+    """``variant``/``overrides``: named hillclimb configurations — e.g.
+    variant='absorbed', overrides={'mla_absorbed': True} — written to their
+    own artifact so baseline and optimized stay separately visible."""
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    qtag = f"__{quant}" if quant != "none" else ""
+    vtag = f"__{variant}" if variant else ""
+    out_path = OUT_DIR / f"{arch}__{shape_name}__{mesh_tag}{qtag}{vtag}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch, quant=quant, **(overrides or {}))
+    shape = SHAPES[shape_name]
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag, "quant": quant,
+        "variant": variant,
+        "applicable": shape_applicable(cfg, shape),
+        "n_params": cfg.n_params(), "n_active_params": cfg.n_active_params(),
+    }
+    if not result["applicable"]:
+        result["status"] = "skipped_inapplicable"
+        result["reason"] = "long_500k needs sub-quadratic sequence mixing (full attention arch)"
+        _write(out_path, result)
+        return result
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        with mesh:
+            step, args, in_shardings, donate, out_shardings = build_cell(
+                cfg, shape, mesh, sharding_opts=sharding_opts)
+            lowered = jax.jit(step, in_shardings=in_shardings, out_shardings=out_shardings,
+                              donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0]
+            hlo = compiled.as_text()
+            coll = parse_collective_bytes(hlo)
+            # per-layer probe extrapolation (single-pod roofline mesh only —
+            # multi-pod pass is the shardability proof, roofline is 16x16)
+            probe = None
+            if not multi_pod:
+                try:
+                    probe = probe_extrapolate(cfg, shape, mesh, sharding_opts)
+                except Exception as pe:  # noqa: BLE001
+                    probe = {"error": f"{type(pe).__name__}: {pe}"}
+        result.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            flops=float(cost.get("flops", -1)),
+            bytes_accessed=float(cost.get("bytes accessed", -1)),
+            cost_analysis={k: float(v) for k, v in cost.items()
+                           if isinstance(v, (int, float)) and abs(float(v)) < 1e30},
+            memory_analysis=dict(
+                argument_bytes=int(getattr(mem, "argument_size_in_bytes", -1)),
+                output_bytes=int(getattr(mem, "output_size_in_bytes", -1)),
+                temp_bytes=int(getattr(mem, "temp_size_in_bytes", -1)),
+                alias_bytes=int(getattr(mem, "alias_size_in_bytes", -1)),
+                code_bytes=int(getattr(mem, "generated_code_size_in_bytes", -1)),
+            ),
+            collectives=coll,
+            probe=probe,
+        )
+        if verbose:
+            gb = (result["memory_analysis"]["argument_bytes"]
+                  + result["memory_analysis"]["temp_bytes"]) / 2**30
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_tag}: OK "
+                  f"(lower {t_lower:.0f}s, compile {t_compile:.0f}s, "
+                  f"{gb:.2f} GiB/dev, {result['flops']:.3e} FLOPs)", flush=True)
+    except Exception as e:  # noqa: BLE001 — dry-run failures are data
+        result.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_tag}: FAIL {e}", flush=True)
+    _write(out_path, result)
+    return result
+
+
+def _write(path: Path, obj: dict):
+    path.parent.mkdir(parents=True, exist_ok=True)
+    slim = dict(obj)
+    path.write_text(json.dumps(slim, indent=1, default=str))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--quant", default="none",
+                    choices=["none", "ternary", "ternary_packed"])
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    n_fail = 0
+    for mp in meshes:
+        for a, s in cells:
+            r = run_cell(a, s, multi_pod=mp, quant=args.quant, force=args.force)
+            n_fail += r["status"] == "error"
+    sys.exit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh definitions.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — smoke tests and benches must keep seeing the
+single real CPU device; only dryrun.py forces 512 host devices.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod (TPU v5e pod); 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Whatever devices exist (1 CPU here) as a degenerate (data, model) mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

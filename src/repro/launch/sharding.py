@@ -1,0 +1,293 @@
+"""Sharding rules: logical axes -> mesh axes, and path-based parameter specs.
+
+Parallelism plan (Megatron-style TP x DP, EP for MoE, sequence-sharded KV
+caches for decode):
+
+  batch      -> ("pod", "data")     data parallel (pod axis is outer-DP)
+  heads/mlp/vocab/expert -> "model" tensor/expert parallel
+  cache seq  -> "model"             flash-decode via GSPMD reductions
+  (long_500k, batch=1: cache seq -> ("pod","data","model") — all 512 ways)
+
+Column-parallel linears: wq, w_uq/w_uk/w_uv, w_gate/w_up, shared_*, lm_head,
+w_z/w_x/w_dt.  Row-parallel: wo, w_down, out_proj, shared_down.  Replicated:
+wk/wv (GQA KV heads < model-axis size for every assigned arch), w_dq/w_dkv
+(MLA latents), router, B/C projections, norms.
+
+``ternary_packed`` params shard exactly like their dense counterparts
+("packed" ~ w, "scale" ~ b).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig, ShapeConfig
+
+# projection name -> parallelism kind
+_COL = {"wq", "w_uq", "w_uk", "w_uv", "w_gate", "w_up", "shared_gate",
+        "shared_up", "lm_head", "w_z", "w_x", "w_dt"}
+_ROW = {"wo", "w_down", "out_proj", "shared_down"}
+_REP = {"wk", "wv", "w_dq", "w_dkv", "router", "w_B", "w_C"}
+
+
+class ShardingRules:
+    """Resolves logical axis names and parameter paths to PartitionSpecs for
+    a given mesh.  ``logical`` maps a logical axis to mesh axis (or tuple)."""
+
+    def __init__(self, mesh: Mesh, *, batch_axes=None, cache_seq_axes=("model",),
+                 fsdp: bool = True, moe_ep: bool = False):
+        self.mesh = mesh
+        self.fsdp = fsdp
+        # moe_ep: weight-stationary expert parallelism for serving — expert
+        # banks shard over (data x model) and stay resident; activations
+        # (tiny at decode) move instead of re-gathering GBs of expert
+        # weights every token (the §Perf dbrx-decode hillclimb)
+        self.moe_ep = moe_ep
+        names = mesh.axis_names
+        dp = tuple(a for a in ("pod", "data") if a in names)
+        self.batch_axes = batch_axes if batch_axes is not None else dp
+        self.logical: Dict[str, Any] = {
+            "batch": self.batch_axes if self.batch_axes else None,
+            "seq": None,
+            # Megatron-style sequence parallelism on the residual stream:
+            # remat-saved per-layer activations shrink by the model-axis size
+            # (measured on gemma-2b train_4k: 21.5 -> 5.7 GiB temps/device).
+            # The shard-fn divisibility guard auto-disables it for decode
+            # (S=1) and smoke shapes.
+            "res_seq": "model",
+            "embed": None,
+            "heads": "model",
+            "kv_heads": None,
+            "mlp": "model",
+            "vocab": "model",
+            "expert": "model",
+            "cache_seq": cache_seq_axes,
+            # MoE activation layout: tokens grouped by batch (data-sharded)
+            # by default; moe_ep serving flips to experts-on-data with
+            # replicated (tiny) decode tokens so expert weights stay resident
+            "moe_tokens": (self.batch_axes if not moe_ep else None),
+            "moe_experts": (None if not moe_ep else "data"),
+        }
+
+    # ---- activations -------------------------------------------------------
+    def spec(self, *names: Optional[str]) -> P:
+        return P(*[self.logical.get(n) if n else None for n in names])
+
+    def _axes_size(self, logical_name) -> int:
+        ax = self.logical.get(logical_name)
+        if ax is None:
+            return 1
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        if isinstance(ax, str):
+            return sizes[ax]
+        n = 1
+        for a in ax:
+            n *= sizes[a]
+        return n
+
+    def make_shard_fn(self):
+        """Constraint applicator that SKIPS non-divisible dims entirely —
+        padding a size-1 KV-head axis 16 ways replicates tensors and triggers
+        GSPMD 'involuntary full rematerialization' (measured: 2x memory on
+        gemma-2b).  Let GSPMD propagate from the param shardings instead."""
+        rules = self
+
+        def shard(x, *names):
+            for dim, nm in enumerate(names):
+                if nm is None:
+                    continue
+                size = rules._axes_size(nm)
+                if size > 1 and x.shape[dim] % size != 0:
+                    return x
+            try:
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(rules.mesh, rules.spec(*names))
+                )
+            except (ValueError, RuntimeError):
+                return x
+
+        return shard
+
+    # ---- parameters --------------------------------------------------------
+    def param_spec(self, path: Tuple[str, ...], leaf) -> P:
+        """Sharding for one parameter leaf, identified by its pytree path."""
+        parts = [p for p in path]
+        name = parts[-1]                      # w | b | packed | scale | table | g ...
+        proj = parts[-2] if len(parts) >= 2 else ""
+        scanned = any(p.startswith("seg") for p in parts)
+
+        def wrap(spec_tail: Tuple) -> P:
+            lead = (None,) if scanned else ()
+            return P(*lead, *spec_tail)
+
+        # embeddings
+        if proj == "embed" and name == "table":
+            return P(self.logical["vocab"], None)
+        # MoE expert banks: TENSOR-parallel experts — moe_d_ff shards over
+        # "model", experts/d_model pick up FSDP via _fixup.  (EP layouts with
+        # E on "model" forced token all-to-alls that GSPMD replicated.)
+        # moe_ep (serving): experts additionally shard over "data" and stay
+        # RESIDENT (no FSDP re-gather per token).
+        if name in ("w_up", "w_gate") and proj == "moe":     # [E, D, F]
+            return wrap(("data" if self.moe_ep else None, None, "model"))
+        if name == "w_down" and proj == "moe":               # [E, F, D]
+            return wrap(("data" if self.moe_ep else None, "model", None))
+        # mamba per-head vectors
+        if name in ("A_log", "D", "dt_bias") or (name == "norm_g" and proj == "mamba"):
+            return wrap(("model",))
+        if name in ("conv_x_w",):
+            return wrap((None, "model"))
+        if name in ("conv_x_b",):
+            return wrap(("model",))
+        if name in ("conv_B_w", "conv_C_w"):
+            return wrap((None, None))
+        if name in ("conv_B_b", "conv_C_b"):
+            return wrap((None,))
+        # linears
+        kind = None
+        if proj in _COL:
+            kind = "col"
+        elif proj in _ROW:
+            kind = "row"
+        elif proj in _REP:
+            kind = "rep"
+        if kind is None and name in ("w", "b", "packed", "scale"):
+            kind = "rep"
+        if kind == "col":
+            if name in ("w", "packed"):
+                return wrap((None, "model"))
+            if name in ("b", "scale"):
+                return wrap(("model",))
+        if kind == "row":
+            if name in ("w", "packed"):
+                return wrap(("model", None))
+            if name in ("b", "scale"):
+                return wrap((None,))
+        if kind == "rep":
+            return wrap(tuple(None for _ in range(leaf.ndim - (1 if scanned else 0))))
+        # norms / everything else: replicated
+        return wrap(tuple(None for _ in range(leaf.ndim - (1 if scanned else 0))))
+
+    def _fixup(self, spec: P, leaf, fsdp: bool = True) -> P:
+        """(1) Drop sharded dims that don't divide (pjit rejects uneven
+        argument shardings — e.g. vocab 50280 on a 16-way axis).
+        (2) FSDP/ZeRO: shard the largest remaining replicated dim over the
+        DP axes so params+optimizer state scale with the FULL chip count
+        (dbrx-132b bf16 went 16.2 GiB -> ~1 GiB/device).  XLA re-gathers
+        per-layer inside the scan (streaming FSDP) and reduce-scatters
+        gradients — the expected collective pattern at this scale."""
+        shape = getattr(leaf, "shape", ())
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+        def axsize(e):
+            if e is None:
+                return 1
+            if isinstance(e, str):
+                return sizes[e]
+            n = 1
+            for a in e:
+                n *= sizes[a]
+            return n
+
+        entries = [
+            e if (e is None or shape[i] % axsize(e) == 0) else None
+            for i, e in enumerate(entries)
+        ]
+        dp = tuple(a for a in ("pod", "data") if a in sizes)
+        if dp and fsdp:
+            dp_n = 1
+            for a in dp:
+                dp_n *= sizes[a]
+            # pick the largest unsharded, divisible dim for FSDP
+            cands = [
+                (shape[i], i) for i, e in enumerate(entries)
+                if e is None and shape[i] % dp_n == 0 and shape[i] >= dp_n
+            ]
+            if cands:
+                _, i = max(cands)
+                entries[i] = dp if len(dp) > 1 else dp[0]
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def param_pspecs(self, params_tree, *, fsdp: Optional[bool] = None):
+        fsdp = self.fsdp if fsdp is None else fsdp
+
+        def f(path, leaf):
+            keys = tuple(_key_name(k) for k in path)
+            spec = self.param_spec(keys, leaf)
+            return self._fixup(spec, leaf, fsdp=fsdp)
+
+        return jax.tree_util.tree_map_with_path(f, params_tree)
+
+    def param_shardings(self, params_tree):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), self.param_pspecs(params_tree)
+        )
+
+    # ---- caches -------------------------------------------------------------
+    def cache_pspecs(self, cache_tree, cfg: ModelConfig):
+        ba = self.logical["batch"]
+        cs = self.logical["cache_seq"]
+
+        def f(path, leaf):
+            keys = [str(_key_name(k)) for k in path]
+            name = keys[-1]
+            if name == "len":
+                return P()
+            if name == "enc_out":
+                return P(ba, None, None)
+            # all per-layer caches are stacked: leading [n_steps] axis
+            if name in ("k", "v"):          # [L, B, S, KV, hd]
+                return P(None, ba, cs, None, None)
+            if name in ("ckv", "krope"):    # [L, B, S, r]
+                return P(None, ba, cs, None)
+            if name == "h":                  # [L, B, H, P, N]
+                return P(None, ba, "model", None, None)
+            if name == "conv_x":             # [L, B, K-1, di]
+                return P(None, ba, None, "model")
+            if name in ("conv_B", "conv_C"):
+                return P(None, ba, None, None)
+            return P(*[None] * leaf.ndim)
+
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: self._fixup(f(p, l), l, fsdp=False), cache_tree
+        )
+
+    def cache_shardings(self, cache_tree, cfg: ModelConfig):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(self.mesh, s), self.cache_pspecs(cache_tree, cfg)
+        )
+
+
+def _key_name(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return f"i{k.idx}"
+    return str(k)
+
+
+def rules_for_cell(mesh: Mesh, cfg: ModelConfig, shape: ShapeConfig,
+                   **opts) -> ShardingRules:
+    """Pick batch/cache-seq axes for a given (arch x shape) cell.
+
+    If the global batch doesn't divide the DP axes (long_500k has batch=1),
+    batch replicates and the cache sequence takes every mesh axis instead.
+    ``opts`` forward hillclimb sharding variants (fsdp=, moe_ep=).
+    """
+    names = mesh.axis_names
+    sizes = dict(zip(names, mesh.devices.shape))
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    dp_size = 1
+    for a in dp:
+        dp_size *= sizes[a]
+    if shape.global_batch % dp_size == 0:
+        return ShardingRules(mesh, batch_axes=dp, cache_seq_axes="model", **opts)
+    # batch too small: shard sequence over everything
+    return ShardingRules(mesh, batch_axes=(), cache_seq_axes=tuple(names), **opts)

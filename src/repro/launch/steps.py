@@ -1,0 +1,179 @@
+"""Step functions: train / prefill / decode — shared by the real launcher,
+the smoke tests, and the multi-pod dry-run.
+
+``input_specs()`` returns ShapeDtypeStruct stand-ins for every model input of
+a given (arch x shape) cell: weak-type-correct, shardable, no allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.model import cache_spec, forward, init_params, lm_loss
+from repro.optim.adamw import AdamWConfig, AdamWState, adamw_init, adamw_update
+from repro.optim.compress import compress_with_feedback, decompress, init_residuals
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: AdamWState
+    residuals: Any = None  # ternary grad-compression error feedback (optional)
+
+
+def make_train_state(cfg: ModelConfig, key, *, compress: bool = False) -> TrainState:
+    params = init_params(cfg, key, dtype=jnp.float32)
+    return TrainState(
+        params=params,
+        opt=adamw_init(params),
+        residuals=init_residuals(params) if compress else None,
+    )
+
+
+def train_state_specs(cfg: ModelConfig, *, compress: bool = False):
+    """Abstract TrainState (ShapeDtypeStructs) — no allocation (for dry-run)."""
+    return jax.eval_shape(
+        lambda k: make_train_state(cfg, k, compress=compress), jax.random.PRNGKey(0)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    *,
+    shard=None,
+    compress_grads: bool = False,
+    accum_steps: int = 1,
+) -> Callable:
+    """(state, batch) -> (state, metrics).  batch keys: tokens, targets
+    [, frontend_embeds, enc_embeds]."""
+    shard = shard or (lambda x, *n: x)
+
+    def loss_fn(params, batch):
+        return lm_loss(
+            params, cfg, batch["tokens"], batch["targets"],
+            frontend_embeds=batch.get("frontend_embeds"),
+            enc_embeds=batch.get("enc_embeds"),
+            shard=shard,
+        )
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        if accum_steps > 1:
+            def micro(carry, mb):
+                acc_g, acc_l = carry
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(state.params, mb)
+                return (jax.tree_util.tree_map(jnp.add, acc_g, g), acc_l + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32)
+                if jnp.issubdtype(p.dtype, jnp.floating) else jnp.zeros((), jnp.float32),
+                state.params,
+            )
+            mbs = jax.tree_util.tree_map(
+                lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps, *x.shape[1:]),
+                batch,
+            )
+            (grads, loss_sum), _ = jax.lax.scan(micro, (zeros, jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, grads)
+            metrics = {"loss": loss_sum / accum_steps}
+        else:
+            (loss, m), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.params, batch)
+            metrics = {"loss": m["loss"], "aux": m["aux"]}
+
+        residuals = state.residuals
+        if compress_grads:
+            # ternary-compress before the DP all-reduce (16x wire reduction);
+            # error feedback keeps the optimizer trajectory unbiased.
+            cg, residuals = compress_with_feedback(grads, residuals)
+            grads = decompress(cg, grads)
+
+        new_params, new_opt, om = adamw_update(opt_cfg, state.params, grads, state.opt)
+        metrics.update(om)
+        return TrainState(params=new_params, opt=new_opt, residuals=residuals), metrics
+
+    return train_step
+
+
+def prefill_cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Cache length for prefill: tokens + stub frontend patches (vlm)."""
+    return seq_len + (cfg.frontend_seq if cfg.frontend == "vision" else 0)
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int, *, shard=None,
+                      cache_dtype=jnp.bfloat16) -> Callable:
+    """(params, batch) -> (last_logits, cache).  Builds the cache in-step."""
+    shard = shard or (lambda x, *n: x)
+    max_len = prefill_cache_len(cfg, max_len)
+
+    def prefill_step(params, batch):
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        cache0 = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            cache_spec(cfg, b, max_len, cache_dtype),
+        )
+        out = forward(
+            params, cfg, tokens, mode="prefill", cache=cache0, logits_mode="last",
+            frontend_embeds=batch.get("frontend_embeds"),
+            enc_embeds=batch.get("enc_embeds"),
+            shard=shard,
+        )
+        return out.logits[:, -1, :], out.cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, shard=None) -> Callable:
+    """(params, tokens [B,1], cache) -> (logits [B,V], cache)."""
+    shard = shard or (lambda x, *n: x)
+
+    def decode_step(params, tokens, cache):
+        out = forward(params, cfg, tokens, mode="decode", cache=cache, shard=shard)
+        return out.logits[:, 0, :], out.cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Input specs (the dry-run contract)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *, cache_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every input of this cell's step.
+
+    train:   {batch: {tokens, targets [, frontend_embeds, enc_embeds]}}
+    prefill: {batch: {tokens [, ...]}}
+    decode:  {tokens: [B, 1], cache: <full cache at seq_len>}
+    """
+    b, s = shape.global_batch, shape.seq_len
+    tok = lambda ss: jax.ShapeDtypeStruct((b, ss), jnp.int32)
+    extras: Dict[str, Any] = {}
+    if cfg.frontend == "vision":
+        extras["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_seq, cfg.d_model), jnp.bfloat16
+        )
+    if cfg.is_encdec:
+        extras["enc_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.enc_seq_len, cfg.d_model), jnp.bfloat16
+        )
+    if shape.kind == "train":
+        return {"batch": {"tokens": tok(s), "targets": tok(s), **extras}}
+    if shape.kind == "prefill":
+        return {"batch": {"tokens": tok(s), **extras}}
+    # NOTE: decode caches for vision archs include frontend positions
+    # (prefill wrote patches + tokens); handled via prefill_cache_len()
+    # decode: one new token against a full cache of length seq_len
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "cache": cache_spec(cfg, b, s, cache_dtype),
+    }

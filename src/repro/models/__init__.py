@@ -1,0 +1,10 @@
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES
+from repro.models.model import (
+    init_params,
+    forward,
+    lm_loss,
+    cache_spec,
+    init_cache,
+    build_segments,
+    ModelOutput,
+)

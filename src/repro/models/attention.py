@@ -1,0 +1,445 @@
+"""Attention: GQA/MQA/MHA with RoPE + KV cache, chunked (online-softmax)
+prefill/train path, and DeepSeek-style MLA (Multi-head Latent Attention).
+
+Distribution notes (see launch/sharding.py for the rules):
+  * query heads shard over "model"; KV heads are replicated when
+    n_kv_heads < model-axis size (GQA), so decode KV caches shard over
+    (batch -> data, seq -> model) instead — GSPMD turns the softmax and the
+    PV einsum over the sequence-sharded axis into all-reduces, which is
+    exactly flash-decode's math.
+  * the chunked path keeps the score matrix at [.., q_chunk, kv_chunk] so a
+    32k-token prefill never materializes a 32k x 32k score tensor.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, linear, linear_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    h, kv, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    q = dict(quant=cfg.quant)
+    if cfg.attn_type == "mla":
+        qk_dim = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        p = {
+            "w_dkv": linear_init(ks[1], d, cfg.kv_lora_rank + cfg.qk_rope_head_dim, quant=cfg.quant, dtype=dtype),
+            "w_uk": linear_init(ks[2], cfg.kv_lora_rank, h * cfg.qk_nope_head_dim, quant=cfg.quant, dtype=dtype),
+            "w_uv": linear_init(ks[3], cfg.kv_lora_rank, h * cfg.v_head_dim, quant=cfg.quant, dtype=dtype),
+            "wo": linear_init(ks[4], h * cfg.v_head_dim, d, quant=cfg.quant, dtype=dtype),
+            "ckv_norm": {"g": jnp.ones((cfg.kv_lora_rank,), dtype)},
+        }
+        if cfg.q_lora_rank:
+            p["w_dq"] = linear_init(ks[0], d, cfg.q_lora_rank, quant=cfg.quant, dtype=dtype)
+            p["w_uq"] = linear_init(ks[5], cfg.q_lora_rank, h * qk_dim, quant=cfg.quant, dtype=dtype)
+        else:
+            p["wq"] = linear_init(ks[0], d, h * qk_dim, quant=cfg.quant, dtype=dtype)
+        return p
+    return {
+        "wq": linear_init(ks[0], d, h * hd, bias=cfg.qkv_bias, quant=cfg.quant, dtype=dtype),
+        "wk": linear_init(ks[1], d, kv * hd, bias=cfg.qkv_bias, quant=cfg.quant, dtype=dtype),
+        "wv": linear_init(ks[2], d, kv * hd, bias=cfg.qkv_bias, quant=cfg.quant, dtype=dtype),
+        "wo": linear_init(ks[3], h * hd, d, quant=cfg.quant, dtype=dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core softmax-attention kernels (pure jnp; XLA/GSPMD handles sharding)
+# ---------------------------------------------------------------------------
+
+def _gqa_scores_full(q, k, scale):
+    """q: [B,Sq,KV,G,hd], k: [B,Skv,KV,hd] -> [B,KV,G,Sq,Skv]."""
+    return jnp.einsum("bqkgd,bskd->bkgqs", q, k) * scale
+
+
+def full_attention(q, k, v, mask, scale):
+    """Reference full-materialization path (small S / smoke tests).
+
+    q: [B, Sq, H, hd] with H = KV*G; k,v: [B, Skv, KV, hd];
+    mask: broadcastable to [B, 1, 1, Sq, Skv] (True = attend).
+    """
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    dv = v.shape[-1]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    s = _gqa_scores_full(qg, k, scale).astype(jnp.float32)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v)
+    return o.reshape(b, sq, h, dv)
+
+
+def chunked_causal_attention(q, k, v, scale, *, q_chunk: int = 1024, kv_chunk: int = 1024):
+    """Flash attention wrapper: [B,S,H,hd] x [B,S,KV,hd] -> [B,S,H,dv].
+
+    Dispatches to models.flash.flash_attention (custom-VJP, O(S*chunk)
+    memory in both passes).  The naive online-softmax reference below
+    (_chunked_reference) is kept for equivalence tests.
+    """
+    from repro.models.flash import flash_attention
+
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    qg = q.reshape(b, sq, kvh, h // kvh, hd)
+    o = flash_attention(qg, k, v, scale, q_chunk, kv_chunk)
+    return o.reshape(b, sq, h, v.shape[-1])
+
+
+def _chunked_reference(q, k, v, scale, *, q_chunk: int = 2048, kv_chunk: int = 2048):
+    """Naive online-softmax attention (no custom VJP) — test oracle only.
+
+    The q-chunk loop is a *static* python loop, so chunk i only ever scans
+    kv chunks 0..i — the causal upper triangle is skipped at trace time
+    (no wasted FLOPs, visible in cost_analysis).
+    """
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    dv = v.shape[-1]
+    g = h // kvh
+    n_q = -(-sq // q_chunk)
+    outs = []
+    for i in range(n_q):
+        q0 = i * q_chunk
+        cq = min(q_chunk, sq - q0)
+        qi = jax.lax.dynamic_slice_in_dim(q, q0, cq, axis=1).reshape(b, cq, kvh, g, hd)
+        q_pos = q0 + jnp.arange(cq)
+        n_kv = -(-min((i + 1) * q_chunk, sq) // kv_chunk)
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            k0 = j * kv_chunk
+            kj = jax.lax.dynamic_slice_in_dim(k, k0, kv_chunk, axis=1)
+            vj = jax.lax.dynamic_slice_in_dim(v, k0, kv_chunk, axis=1)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qi, kj).astype(jnp.float32) * scale
+            kv_pos = k0 + jnp.arange(kv_chunk)
+            causal = q_pos[:, None] >= kv_pos[None, :]
+            valid = kv_pos[None, :] < sq
+            s = jnp.where((causal & valid)[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vj.dtype), vj
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, cq, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(n_kv))
+        oi = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        outs.append(oi.transpose(0, 3, 1, 2, 4).reshape(b, cq, h, dv))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, scale, shard=None):
+    """Single-token attention over the cache.
+
+    q: [B, H, hd]; caches: [B, S, KV, hd]; cache_len: scalar or [B] —
+    number of valid positions.  The cache sequence axis is sharded over
+    "model"; the EXPLICIT constraints below pin the flash-decode schedule:
+    scores stay seq-sharded, the softmax max/sum and the PV partial outputs
+    are what cross the wire.  Without them GSPMD all-gathers the whole
+    per-layer cache (measured 32.6 GB/step on dbrx-132b decode_32k).
+    """
+    b, s, kvh, hd = k_cache.shape
+    h = q.shape[1]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32) * scale
+    if shard is not None:
+        scores = shard(scores, "batch", None, None, "cache_seq")
+    pos = jnp.arange(s)
+    valid = pos[None] < jnp.reshape(cache_len, (-1, 1))  # [B, S]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    # distributed softmax: max/sum reduce over the sharded axis (all-reduce
+    # of [B,KV,G] scalars, not of the scores)
+    m = jax.lax.stop_gradient(jnp.max(scores, axis=-1, keepdims=True))
+    p = jnp.exp(scores - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / denom
+    if shard is not None:
+        p = shard(p, "batch", None, None, "cache_seq")
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
+    if shard is not None:
+        o = shard(o, "batch", None, None, None)
+    return o.reshape(b, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+def gqa_forward(
+    p,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    causal: bool = True,
+    cache: Optional[dict] = None,
+    cache_len=None,
+    shard=None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """x: [B, S, D].  Returns (out [B,S,D], updated cache or None).
+
+    Prefill (cache given, S>1): fills cache[0:S], returns it.
+    Decode (cache given, S==1): reads cache[:cache_len], writes at cache_len.
+    """
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    scale = 1.0 / math.sqrt(hd)
+    q = linear(p["wq"], x, quant=cfg.quant, act_quant=cfg.act_quant).reshape(b, s, h, hd)
+    k = linear(p["wk"], x, quant=cfg.quant, act_quant=cfg.act_quant).reshape(b, s, kvh, hd)
+    v = linear(p["wv"], x, quant=cfg.quant, act_quant=cfg.act_quant).reshape(b, s, kvh, hd)
+    q = apply_rope(q, positions, cfg.rope_theta, partial=cfg.partial_rotary_factor)
+    k = apply_rope(k, positions, cfg.rope_theta, partial=cfg.partial_rotary_factor)
+    if shard is not None:
+        q = shard(q, "batch", "seq", "heads", None)
+        k = shard(k, "batch", "seq", "kv_heads", None)
+        v = shard(v, "batch", "seq", "kv_heads", None)
+
+    new_cache = None
+    if cache is not None and s == 1:
+        # ---- decode: append then attend over the cache ----
+        idx = jnp.reshape(cache_len, ())
+        kc = _cache_write(cache["k"], k, idx)
+        vc = _cache_write(cache["v"], v, idx)
+        o = decode_attention(q[:, 0], kc, vc, idx + 1, scale, shard=shard)
+        o = o.reshape(b, 1, h * hd)
+        new_cache = {"k": kc, "v": vc}
+    else:
+        if causal:
+            if s >= 4096:
+                o = chunked_causal_attention(q, k, v, scale)
+            else:
+                mask = (positions[:, :, None] >= positions[:, None, :])[:, None, None]
+                o = full_attention(q, k, v, mask, scale)
+        else:
+            if s >= 2048:
+                # encoder self-attention at long S: non-causal flash
+                from repro.models.flash import flash_attention
+
+                qg = q.reshape(b, s, kvh, h // kvh, hd)
+                o = flash_attention(qg, k, v, scale, causal=False).reshape(b, s, h, hd)
+            else:
+                mask = jnp.ones((b, 1, 1, s, s), bool)
+                o = full_attention(q, k, v, mask, scale)
+        o = o.reshape(b, s, h * hd)
+        if cache is not None:
+            kc = _cache_fill(cache["k"], k)
+            vc = _cache_fill(cache["v"], v)
+            new_cache = {"k": kc, "v": vc}
+    out = linear(p["wo"], o, quant=cfg.quant, act_quant=cfg.act_quant)
+    return out, new_cache
+
+
+def _cache_write(cache, kv, idx):
+    """Write one step at position idx.  cache: [B,S,KV,hd], kv: [B,1,KV,hd].
+
+    Implemented as a MASKED SELECT, not dynamic_update_slice: a DUS with a
+    runtime index on the sequence-sharded cache axis cannot be partitioned
+    by GSPMD — it falls back to replicating the whole per-layer cache
+    (measured: +17 GiB/device on qwen2.5-32b decode_32k).  The pointwise
+    select partitions along every axis.
+    """
+    s = cache.shape[1]
+    hit = (jnp.arange(s) == idx)[None, :, None, None]
+    return jnp.where(hit, kv.astype(cache.dtype), cache)
+
+
+def _cache_fill(cache, kv):
+    """Prefill: write kv[0:S] into the cache prefix."""
+    s = kv.shape[1]
+    return jax.lax.dynamic_update_slice(cache, kv.astype(cache.dtype), (0, 0, 0, 0))
+
+
+def gqa_cache_spec(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((batch, max_len, kvh, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, max_len, kvh, hd), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (encoder-decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    h, kvh, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    return {
+        "wq": linear_init(ks[0], d, h * hd, quant=cfg.quant, dtype=dtype),
+        "wk": linear_init(ks[1], d, kvh * hd, quant=cfg.quant, dtype=dtype),
+        "wv": linear_init(ks[2], d, kvh * hd, quant=cfg.quant, dtype=dtype),
+        "wo": linear_init(ks[3], h * hd, d, quant=cfg.quant, dtype=dtype),
+    }
+
+
+def cross_attention(p, cfg: ModelConfig, x: jax.Array, enc_out: jax.Array) -> jax.Array:
+    """Decoder cross-attention over (stub-)encoder output [B, S_enc, D]."""
+    b, s, d = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = linear(p["wq"], x, quant=cfg.quant).reshape(b, s, h, hd)
+    k = linear(p["wk"], enc_out, quant=cfg.quant).reshape(b, -1, kvh, hd)
+    v = linear(p["wv"], enc_out, quant=cfg.quant).reshape(b, -1, kvh, hd)
+    scale = 1.0 / math.sqrt(hd)
+    if s * k.shape[1] >= 2048 * 1024:
+        from repro.models.flash import flash_attention
+
+        qg = q.reshape(b, s, kvh, h // kvh, hd)
+        o = flash_attention(qg, k, v, scale, causal=False).reshape(b, s, h * hd)
+    else:
+        mask = jnp.ones((b, 1, 1, s, k.shape[1]), bool)
+        o = full_attention(q, k, v, mask, scale).reshape(b, s, h * hd)
+    return linear(p["wo"], o, quant=cfg.quant)
+
+
+# ---------------------------------------------------------------------------
+# MLA — DeepSeek multi-head latent attention
+# ---------------------------------------------------------------------------
+
+def mla_forward(
+    p,
+    cfg: ModelConfig,
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    cache: Optional[dict] = None,
+    cache_len=None,
+    absorbed_decode: bool = False,
+    shard=None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """MLA: the KV cache holds only [c_kv (kv_lora) ; k_rope] per token.
+
+    ``absorbed_decode``: the W_uk/W_uv-absorption decode path (the standard
+    MLA serving optimization — scores computed directly in latent space);
+    OFF by default so the paper-faithful baseline and the optimized variant
+    are separately measurable (EXPERIMENTS.md §Perf).
+    """
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv, r = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    if cfg.q_lora_rank:
+        qc = linear(p["w_dq"], x, quant=cfg.quant)
+        q = linear(p["w_uq"], qc, quant=cfg.quant).reshape(b, s, h, dn + dr)
+    else:
+        q = linear(p["wq"], x, quant=cfg.quant).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = linear(p["w_dkv"], x, quant=cfg.quant)
+    ckv, k_rope = dkv[..., :r], dkv[..., r:]
+    ckv = _rms(ckv, p["ckv_norm"]["g"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+
+    new_cache = None
+    if cache is not None and s == 1:
+        idx = jnp.reshape(cache_len, ())
+        hit = (jnp.arange(cache["ckv"].shape[1]) == idx)[None, :, None]
+        ckv_c = jnp.where(hit, ckv.astype(cache["ckv"].dtype), cache["ckv"])
+        kr_c = jnp.where(hit, k_rope.astype(cache["krope"].dtype), cache["krope"])
+        new_cache = {"ckv": ckv_c, "krope": kr_c}
+        s_kv = ckv_c.shape[1]
+        valid = (jnp.arange(s_kv)[None] < (idx + 1))  # [1, S]
+        if absorbed_decode:
+            # score = q_nope^T W_uk c + q_rope^T k_rope, all in latent space
+            wuk = _mat(p["w_uk"]).reshape(r, h, dn)
+            q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], wuk)  # [B,H,r]
+            s_lat = jnp.einsum("bhr,bsr->bhs", q_lat, ckv_c.astype(q_lat.dtype))
+            s_rope = jnp.einsum("bhd,bsd->bhs", q_rope[:, 0], kr_c.astype(q_rope.dtype))
+            scores = (s_lat + s_rope).astype(jnp.float32) * scale
+            scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+            pr = _seq_sharded_softmax(scores, shard)
+            o_lat = jnp.einsum("bhs,bsr->bhr", pr.astype(ckv_c.dtype), ckv_c)  # [B,H,r]
+            wuv = _mat(p["w_uv"]).reshape(r, h, dv)
+            o = jnp.einsum("bhr,rhd->bhd", o_lat.astype(x.dtype), wuv.astype(x.dtype))
+            o = o.reshape(b, 1, h * dv)
+        else:
+            # paper-faithful naive decode: expand K/V for the whole cache
+            k_nope = linear(p["w_uk"], ckv_c.astype(x.dtype), quant=cfg.quant).reshape(b, s_kv, h, dn)
+            vv = linear(p["w_uv"], ckv_c.astype(x.dtype), quant=cfg.quant).reshape(b, s_kv, h, dv)
+            kr = jnp.broadcast_to(kr_c.astype(x.dtype)[:, :, None, :], (b, s_kv, h, dr))
+            kk = jnp.concatenate([k_nope, kr], axis=-1)
+            qq = jnp.concatenate([q_nope, q_rope], axis=-1)[:, 0]  # [B,H,dn+dr]
+            scores = jnp.einsum("bhd,bshd->bhs", qq, kk).astype(jnp.float32) * scale
+            scores = jnp.where(valid[:, None, :], scores, NEG_INF)
+            pr = _seq_sharded_softmax(scores, shard)
+            o = jnp.einsum("bhs,bshd->bhd", pr.astype(vv.dtype), vv).reshape(b, 1, h * dv)
+    else:
+        k_nope = linear(p["w_uk"], ckv, quant=cfg.quant).reshape(b, s, h, dn)
+        vv = linear(p["w_uv"], ckv, quant=cfg.quant).reshape(b, s, h, dv)
+        kr = jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, dr))
+        kk = jnp.concatenate([k_nope, kr], axis=-1)
+        qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+        if shard is not None:
+            qq = shard(qq, "batch", "seq", "heads", None)
+            kk = shard(kk, "batch", "seq", "heads", None)
+            vv = shard(vv, "batch", "seq", "heads", None)
+        if s >= 4096:
+            # heads are uniform here (no GQA grouping): reuse chunked path
+            o = chunked_causal_attention(qq, kk, vv, scale, q_chunk=2048, kv_chunk=2048)
+        else:
+            mask = (positions[:, :, None] >= positions[:, None, :])[:, None, None]
+            o = full_attention(qq, kk, vv, mask, scale)
+        # v_head_dim may differ from qk dim; full_attention returned v dims
+        o = o.reshape(b, s, h * dv)
+        if cache is not None:
+            ckv_c = jax.lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0))
+            kr_c = jax.lax.dynamic_update_slice(cache["krope"], k_rope.astype(cache["krope"].dtype), (0, 0, 0))
+            new_cache = {"ckv": ckv_c, "krope": kr_c}
+    out = linear(p["wo"], o, quant=cfg.quant)
+    return out, new_cache
+
+
+def mla_cache_spec(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return {
+        "ckv": jax.ShapeDtypeStruct((batch, max_len, cfg.kv_lora_rank), dtype),
+        "krope": jax.ShapeDtypeStruct((batch, max_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def _seq_sharded_softmax(scores, shard):
+    """Softmax over a cache_seq-sharded last axis [B, H, S]: constrain the
+    scores so only the max/sum reductions cross the wire (flash-decode)."""
+    if shard is not None:
+        scores = shard(scores, "batch", None, "cache_seq")
+    m = jax.lax.stop_gradient(jnp.max(scores, axis=-1, keepdims=True))
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    if shard is not None:
+        p = shard(p, "batch", None, "cache_seq")
+    return p
+
+
+def _rms(x, g, eps):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * g.astype(jnp.float32)).astype(x.dtype)
+
+
+def _mat(p):
+    """Dense weight view of a (possibly packed) linear param."""
+    if "w" in p:
+        return p["w"]
+    from repro.core.ternary import unpack_ternary
+
+    w = unpack_ternary(p["packed"], axis=0).astype(jnp.float32)
+    return w * p["scale"].astype(jnp.float32)[None, :]

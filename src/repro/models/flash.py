@@ -1,0 +1,162 @@
+"""Flash attention (GQA-grouped, causal or full) with a custom VJP — pure JAX.
+
+Why: reverse-mode AD through a naive online-softmax scan *stores every
+P-chunk* for the backward pass, so training memory is O(S^2) again (measured
++13 GiB/device on gemma-2b train_4k).  The flash backward recomputes P per
+(q-chunk, kv-chunk) pair from (q, k, lse) and never materializes S^2.
+
+Memory: forward residuals are (q, k, v, o, lse) — O(S*hd); backward live
+state is one [cq, ck] score block per step.
+
+Structure: the q-chunk loop is a static python loop, so causal chunk i only
+scans kv chunks 0..i — the strictly-upper triangle is never computed, in
+forward OR backward (visible in cost_analysis as ~2x fewer attention FLOPs
+vs masked-full attention).  ``causal=False`` supports encoder self-attention
+and cross-attention (kv length may differ from q length).
+
+Layout: q [B, S, KV, G, hd] (G = query heads per KV group), k/v [B, Sk, KV, hd].
+On TPU this lowers to MXU-shaped einsums; block sizes (1024) keep blocks
+VMEM-resident under XLA fusion.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _n_kv_chunks(i: int, q_chunk: int, kv_chunk: int, sq: int, sk: int, causal: bool) -> int:
+    if not causal:
+        return -(-sk // kv_chunk)
+    return -(-min((i + 1) * q_chunk, sk) // kv_chunk)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, scale: float, q_chunk: int = 1024,
+                    kv_chunk: int = 1024, causal: bool = True):
+    """Grouped attention.  q: [B,S,KV,G,hd]; k,v: [B,Sk,KV,hd].
+    Returns [B,S,KV,G,dv]."""
+    o, _ = _flash_fwd(q, k, v, scale, q_chunk, kv_chunk, causal)
+    return o
+
+
+def _pad_kv(x, kv_chunk):
+    """Pad the seq axis to a kv_chunk multiple: jax.lax.dynamic_slice CLAMPS
+    out-of-bounds starts, which silently mis-reads the last partial chunk."""
+    s = x.shape[1]
+    pad = (-s) % kv_chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+    return x
+
+
+def _attend_chunk(qi, kj, vj, q0, k0, cq, ck, sk, scale, causal, carry):
+    """One online-softmax update.  qi: [B,KV,G,cq,hd], kj/vj: [B,ck,KV,hd]."""
+    m, l, acc = carry
+    s = jnp.einsum("bkgqd,bskd->bkgqs", qi, kj).astype(jnp.float32) * scale
+    kv_pos = k0 + jnp.arange(ck)
+    mask = kv_pos[None, :] < sk
+    if causal:
+        q_pos = q0 + jnp.arange(cq)
+        mask = mask & (q_pos[:, None] >= kv_pos[None, :])
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + p.sum(axis=-1)
+    acc_new = acc * corr[..., None] + jnp.einsum(
+        "bkgqs,bskd->bkgqd", p.astype(vj.dtype), vj
+    ).astype(jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def _flash_fwd(q, k, v, scale, q_chunk, kv_chunk, causal):
+    b, sq, kvh, g, hd = q.shape
+    sk = k.shape[1]
+    dv = v.shape[-1]
+    k = _pad_kv(k, kv_chunk)
+    v = _pad_kv(v, kv_chunk)
+    n_q = -(-sq // q_chunk)
+    os, lses = [], []
+    for i in range(n_q):
+        q0 = i * q_chunk
+        cq = min(q_chunk, sq - q0)
+        qi = jax.lax.dynamic_slice_in_dim(q, q0, cq, axis=1).transpose(0, 2, 3, 1, 4)
+        n_kv = _n_kv_chunks(i, q_chunk, kv_chunk, sq, sk, causal)
+
+        def step(carry, j, qi=qi, q0=q0, cq=cq):
+            k0 = j * kv_chunk
+            kj = jax.lax.dynamic_slice_in_dim(k, k0, kv_chunk, axis=1)
+            vj = jax.lax.dynamic_slice_in_dim(v, k0, kv_chunk, axis=1)
+            return _attend_chunk(qi, kj, vj, q0, k0, cq, kv_chunk, sk, scale, causal, carry), None
+
+        m0 = jnp.full((b, kvh, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, cq, dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(n_kv))
+        o_i = (acc / jnp.maximum(l, 1e-30)[..., None])
+        lse_i = m + jnp.log(jnp.maximum(l, 1e-30))
+        os.append(o_i.transpose(0, 3, 1, 2, 4).astype(q.dtype))   # [B,cq,KV,G,dv]
+        lses.append(lse_i)                                         # [B,KV,G,cq]
+    o = jnp.concatenate(os, axis=1) if len(os) > 1 else os[0]
+    lse = jnp.concatenate(lses, axis=3) if len(lses) > 1 else lses[0]
+    return o, (q, k, v, o, lse, sk)  # k, v saved padded; sk = original length
+
+
+def _flash_bwd(scale, q_chunk, kv_chunk, causal, res, do):
+    q, k, v, o, lse, sk = res  # k, v already padded to kv_chunk multiples
+    b, sq, kvh, g, hd = q.shape
+    n_q = -(-sq // q_chunk)
+    dq_chunks = []
+    dk = jnp.zeros(k.shape, jnp.float32)
+    dv = jnp.zeros(v.shape, jnp.float32)
+    for i in range(n_q):
+        q0 = i * q_chunk
+        cq = min(q_chunk, sq - q0)
+        qi = jax.lax.dynamic_slice_in_dim(q, q0, cq, axis=1).transpose(0, 2, 3, 1, 4)
+        doi = jax.lax.dynamic_slice_in_dim(do, q0, cq, axis=1).transpose(0, 2, 3, 1, 4)
+        oi = jax.lax.dynamic_slice_in_dim(o, q0, cq, axis=1).transpose(0, 2, 3, 1, 4)
+        lse_i = jax.lax.dynamic_slice_in_dim(lse, q0, cq, axis=3)
+        delta = jnp.sum(doi.astype(jnp.float32) * oi.astype(jnp.float32), axis=-1)  # [B,KV,G,cq]
+        n_kv = _n_kv_chunks(i, q_chunk, kv_chunk, sq, sk, causal)
+
+        def step(carry, j, qi=qi, doi=doi, lse_i=lse_i, delta=delta, q0=q0, cq=cq):
+            dqi, dk_acc, dv_acc = carry
+            k0 = j * kv_chunk
+            kj = jax.lax.dynamic_slice_in_dim(k, k0, kv_chunk, axis=1)
+            vj = jax.lax.dynamic_slice_in_dim(v, k0, kv_chunk, axis=1)
+            s = jnp.einsum("bkgqd,bskd->bkgqs", qi, kj).astype(jnp.float32) * scale
+            kv_pos = k0 + jnp.arange(kv_chunk)
+            mask = kv_pos[None, :] < sk
+            if causal:
+                q_pos = q0 + jnp.arange(cq)
+                mask = mask & (q_pos[:, None] >= kv_pos[None, :])
+            p = jnp.where(mask[None, None, None], jnp.exp(s - lse_i[..., None]), 0.0)
+            dp = jnp.einsum("bkgqd,bskd->bkgqs", doi.astype(jnp.float32),
+                            vj.astype(jnp.float32))
+            ds = p * (dp - delta[..., None]) * scale                      # [B,KV,G,cq,ck]
+            dqi = dqi + jnp.einsum("bkgqs,bskd->bkgqd", ds, kj.astype(jnp.float32))
+            dk_j = jnp.einsum("bkgqs,bkgqd->bskd", ds, qi.astype(jnp.float32))
+            dv_j = jnp.einsum("bkgqs,bkgqd->bskd", p, doi.astype(jnp.float32))
+            dk_cur = jax.lax.dynamic_slice_in_dim(dk_acc, k0, kv_chunk, axis=1)
+            dv_cur = jax.lax.dynamic_slice_in_dim(dv_acc, k0, kv_chunk, axis=1)
+            dk_acc = jax.lax.dynamic_update_slice_in_dim(dk_acc, dk_cur + dk_j, k0, axis=1)
+            dv_acc = jax.lax.dynamic_update_slice_in_dim(dv_acc, dv_cur + dv_j, k0, axis=1)
+            return (dqi, dk_acc, dv_acc), None
+
+        dq0 = jnp.zeros((b, kvh, g, cq, hd), jnp.float32)
+        (dqi, dk, dv), _ = jax.lax.scan(step, (dq0, dk, dv), jnp.arange(n_kv))
+        dq_chunks.append(dqi.transpose(0, 3, 1, 2, 4))
+    dq = jnp.concatenate(dq_chunks, axis=1) if len(dq_chunks) > 1 else dq_chunks[0]
+    # k/v were padded in fwd; cotangents must match the ORIGINAL length
+    return (
+        dq.astype(q.dtype),
+        dk[:, :sk].astype(k.dtype),
+        dv[:, :sk].astype(v.dtype),
+    )
+
+
+flash_attention.defvjp(_flash_fwd, _flash_bwd)

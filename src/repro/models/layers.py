@@ -1,0 +1,136 @@
+"""Shared layer primitives: linear (dense / QAT-ternary / packed-ternary),
+norms, rotary embeddings, embedding tables.
+
+Every projection in every architecture funnels through :func:`linear`, which
+is where the paper's technique plugs in (cfg.quant / cfg.act_quant).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ternary import (
+    pack_ternary,
+    ste_ternary_acts,
+    ste_ternary_weights,
+    ternary_quantize_weights,
+    unpack_ternary,
+)
+
+
+# ---------------------------------------------------------------------------
+# Linear with quantization modes
+# ---------------------------------------------------------------------------
+
+def linear_init(key, d_in: int, d_out: int, *, bias: bool = False, quant: str = "none",
+                dtype=jnp.float32, scale: Optional[float] = None):
+    """Create linear params.  ``quant='ternary_packed'`` stores 2-bit weights."""
+    std = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * std
+    if quant == "ternary_packed":
+        t, alpha = ternary_quantize_weights(w, axis=0)
+        k_pad = -(-d_in // 4) * 4
+        if k_pad != d_in:
+            t = jnp.pad(t, ((0, k_pad - d_in), (0, 0)))
+        p = {"packed": pack_ternary(t, axis=0), "scale": alpha.reshape(-1).astype(dtype)}
+    else:
+        p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p, x: jax.Array, *, quant: str = "none", act_quant: str = "none") -> jax.Array:
+    """y = act_q(x) @ W_q (+ b) under the configured quantization mode."""
+    if act_quant == "ternary":
+        x = ste_ternary_acts(x, 0.5)
+    if quant == "ternary_packed":
+        # 2-bit weights expanded on the fly: HBM traffic is uint8/4 per value.
+        w = unpack_ternary(p["packed"], axis=0).astype(x.dtype)
+        w = w[: x.shape[-1], :] if w.shape[0] != x.shape[-1] else w
+        y = jnp.dot(x, w) * p["scale"].astype(x.dtype)
+    elif quant == "ternary":
+        w = ste_ternary_weights(p["w"], 0.7).astype(x.dtype)
+        y = jnp.dot(x, w)
+    else:
+        y = jnp.dot(x, p["w"].astype(x.dtype))
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def norm_init(d: int, *, norm_type: str = "rmsnorm", dtype=jnp.float32):
+    p = {"g": jnp.ones((d,), dtype)}
+    if norm_type == "layernorm":
+        p["b"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p, x: jax.Array, *, norm_type: str = "rmsnorm", eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["g"].astype(jnp.float32) + p["b"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["g"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float, *, partial: float = 1.0) -> jax.Array:
+    rot_dim = int(head_dim * partial) // 2 * 2
+    return 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float, *, partial: float = 1.0) -> jax.Array:
+    """x: [B, S, H, hd]; positions: [B, S] int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta, partial=partial)
+    rot_dim = inv.shape[0] * 2
+    ang = positions[..., None].astype(jnp.float32) * inv  # [B, S, rot/2]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr = x[..., :rot_dim].astype(jnp.float32)
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    rotated = jnp.stack([out1, out2], axis=-1).reshape(*x.shape[:-1], rot_dim)
+    if rot_dim < hd:
+        rotated = jnp.concatenate([rotated, xr_rest(x, rot_dim)], axis=-1)
+    return rotated.astype(x.dtype)
+
+
+def xr_rest(x, rot_dim):
+    return x[..., rot_dim:].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)}
+
+
+def embed_lookup(p, ids: jax.Array, *, scale: bool = False) -> jax.Array:
+    x = jnp.take(p["table"], ids, axis=0)
+    if scale:
+        x = x * math.sqrt(x.shape[-1])
+    return x
+
+
+def logits_from_embedding(p, x: jax.Array) -> jax.Array:
+    return jnp.dot(x, p["table"].astype(x.dtype).T)

@@ -1,0 +1,240 @@
+"""Mamba2 (SSD — state-space duality) block, chunked-scan training path and
+O(1)-state decode path.
+
+Faithful to arXiv:2405.21060: per-head scalar decay A, grouped B/C (G=1),
+depthwise causal conv1d on [x, B, C], gated RMSNorm.
+
+The chunked algorithm (chunk length L):
+    s[t]      = cumsum(dt*A) within the chunk                (log decay)
+    Y_intra   = ((C B^T) ∘ exp(s_t - s_τ) ∘ dt_τ, τ<=t) X    (quadratic in L)
+    h_out     = exp(s_L)*h_in + Σ_τ exp(s_L - s_τ) dt_τ B_τ ⊗ X_τ
+    Y_inter   = C_t exp(s_t) h_in
+so memory is O(T*L + T*N*P/L) instead of O(T*N*P) — this is why jamba/mamba2
+take the ``long_500k`` cell that full attention cannot.
+
+Tensor-parallel layout (Megatron-mamba style): the canonical fused in_proj
+is SPLIT into separate projections (w_z, w_x, w_dt column-parallel over
+heads; w_B/w_C replicated — N is small), because a fused concat axis cannot
+shard cleanly over the "model" axis.  Depthwise convs are per-channel and
+shard with their channels.  Mathematically identical to the fused form.
+
+Note (DESIGN.md §Arch-applicability): jamba v0.1 ships mamba*1* layers; we
+substitute SSD blocks with jamba's dims (state=16, conv=4, expand=2) — same
+asymptotics, one well-tested scan implementation.
+
+The depthwise conv1d optionally routes through the paper's §4 dilated->2D
+mapping (cfg.use_tcn_mapping) — a D=1 degenerate wrap, tested identical —
+so the CUTIE scheduling path is exercised end-to-end inside an LM block.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import linear, linear_init
+
+
+def mamba_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    d, di, n, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    k = cfg.ssm_conv
+
+    def conv(kk, ch):
+        return (jax.random.normal(kk, (k, ch), jnp.float32) * 0.1).astype(dtype)
+
+    return {
+        "w_z": linear_init(ks[0], d, di, quant=cfg.quant, dtype=dtype),
+        "w_x": linear_init(ks[1], d, di, quant=cfg.quant, dtype=dtype),
+        "w_B": linear_init(ks[2], d, n, quant=cfg.quant, dtype=dtype),
+        "w_C": linear_init(ks[3], d, n, quant=cfg.quant, dtype=dtype),
+        "w_dt": linear_init(ks[4], d, nh, quant="none", dtype=dtype),
+        "conv_x_w": conv(ks[5], di),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_B_w": conv(ks[6], n),
+        "conv_B_b": jnp.zeros((n,), dtype),
+        "conv_C_w": conv(ks[7], n),
+        "conv_C_b": jnp.zeros((n,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_g": jnp.ones((di,), dtype),
+        "out_proj": linear_init(jax.random.fold_in(key, 99), di, d, quant=cfg.quant, dtype=dtype),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                           use_tcn_mapping: bool = False) -> jax.Array:
+    """x: [B, T, C]; w: [K, C] depthwise causal."""
+    w = w.astype(x.dtype)  # f32 master weights vs bf16 activations (train)
+    b = b.astype(x.dtype)
+    k, c = w.shape
+    if use_tcn_mapping:
+        # §4 path: wrap(time, D=1) -> undilated 2-D depthwise conv -> unwrap.
+        from repro.core.tcn import unwrap_time_axis, wrap_time_axis
+
+        z = wrap_time_axis(x, 1)                       # [B, T, 1, C]
+        k2d = jnp.zeros((k, 3, 1, c), w.dtype).at[:, 1, 0, :].set(w)
+        y = jax.lax.conv_general_dilated(
+            z, k2d, (1, 1), [(k - 1, 0), (1, 1)],
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=c,
+        )
+        return unwrap_time_axis(y, x.shape[1]) + b
+    y = jax.lax.conv_general_dilated(
+        x, w[:, None, :], (1,), [(k - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=c,
+    )
+    return y + b
+
+
+def _conv_step(hist: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Decode-time conv: hist [B, K, C] (oldest..newest) -> [B, C]."""
+    return jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32)
+
+
+def _ssd_chunked(x, dt, a_log, bmat, cmat, h0, chunk: int):
+    """SSD scan.  x: [B,T,H,P], dt: [B,T,H], bmat/cmat: [B,T,N], h0: [B,H,P,N].
+    Returns (y [B,T,H,P], h_final)."""
+    bsz, t, h, p = x.shape
+    n = bmat.shape[-1]
+    l = min(chunk, t)
+    pad = (-t) % l
+    if pad:
+        # pad the time axis to a chunk multiple.  Padded steps must be
+        # IDENTITY on the state: dt=0 -> decay exp(0)=1, increment dt*B*x=0.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # zeros => identity
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    t_pad = t + pad
+    nc = t_pad // l
+    a = -jnp.exp(a_log)  # [H], negative
+
+    xr = x.reshape(bsz, nc, l, h, p)
+    dtr = dt.reshape(bsz, nc, l, h)
+    br = bmat.reshape(bsz, nc, l, n)
+    cr = cmat.reshape(bsz, nc, l, n)
+
+    out_dtype = x.dtype  # keep the big [B,T,H,P] outputs in compute dtype;
+    # state math stays f32 (h carries, decays) — bf16 ys halve live memory
+
+    def chunk_step(h_in, inputs):
+        xc, dtc, bc, cc = inputs  # [B,l,H,P], [B,l,H], [B,l,N], [B,l,N]
+        da = dtc * a  # [B,l,H] log-decay increments (negative)
+        s = jnp.cumsum(da, axis=1)  # [B,l,H]
+        # intra-chunk: M[t,tau] = exp(s_t - s_tau) * (C_t.B_tau) * dt_tau
+        cb = jnp.einsum("bln,bmn->blm", cc, bc)  # [B,l,l] (t, tau)
+        causal = jnp.tril(jnp.ones((l, l), bool))[None, :, :, None]
+        diff = s[:, :, None, :] - s[:, None, :, :]  # [B,l,l,H]
+        # mask BEFORE exp: the upper triangle has positive diffs that overflow
+        # and poison gradients through jnp.where
+        decay = jnp.exp(jnp.where(causal, diff, -jnp.inf))
+        m = cb[..., None] * decay * dtc[:, None, :, :]  # weight by dt_tau
+        y_intra = jnp.einsum("blmh,bmhp->blhp", m, xc.astype(jnp.float32))
+        # inter-chunk: y_inter[t] = exp(s_t) * C_t . h_in
+        y_inter = jnp.einsum("bln,bhpn->blhp", cc, h_in) * jnp.exp(s)[..., None]
+        # state update
+        tail = jnp.exp(s[:, -1:, :] - s)  # exp(s_L - s_tau) [B,l,H]
+        dbx = jnp.einsum("blh,bln,blhp->bhpn", dtc * tail, bc, xc.astype(jnp.float32))
+        h_out = h_in * jnp.exp(s[:, -1])[:, :, None, None] + dbx
+        return h_out, (y_intra + y_inter).astype(out_dtype)
+
+    h_fin, ys = jax.lax.scan(
+        chunk_step,
+        h0,
+        (xr.transpose(1, 0, 2, 3, 4), dtr.transpose(1, 0, 2, 3),
+         br.transpose(1, 0, 2, 3), cr.transpose(1, 0, 2, 3)),
+    )
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, t_pad, h, p)[:, :t]
+    return y, h_fin
+
+
+def mamba_forward(
+    p,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    state: Optional[dict] = None,
+    shard=None,
+) -> Tuple[jax.Array, Optional[dict]]:
+    """x: [B, T, D].  With ``state`` and T==1: O(1) decode step.
+
+    state = {"h": [B,H,P,N] f32, "conv_x": [B,K-1,di], "conv_B"/"conv_C": [B,K-1,N]}.
+    """
+    bsz, t, d = x.shape
+    di, n, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    q, aq = cfg.quant, cfg.act_quant
+    z = linear(p["w_z"], x, quant=q, act_quant=aq)
+    xin = linear(p["w_x"], x, quant=q, act_quant=aq)
+    bin_ = linear(p["w_B"], x, quant=q, act_quant=aq)
+    cin = linear(p["w_C"], x, quant=q, act_quant=aq)
+    dt_raw = linear(p["w_dt"], x)
+
+    new_state = None
+    if state is not None and t == 1:
+        # ---- decode: O(1) state update ----
+        hx = jnp.concatenate([state["conv_x"], xin.astype(state["conv_x"].dtype)], axis=1)
+        hb = jnp.concatenate([state["conv_B"], bin_.astype(state["conv_B"].dtype)], axis=1)
+        hc = jnp.concatenate([state["conv_C"], cin.astype(state["conv_C"].dtype)], axis=1)
+        xs = jax.nn.silu(_conv_step(hx, p["conv_x_w"], p["conv_x_b"]))
+        bm = jax.nn.silu(_conv_step(hb, p["conv_B_w"], p["conv_B_b"]))
+        cm = jax.nn.silu(_conv_step(hc, p["conv_C_w"], p["conv_C_b"]))
+        xs = xs.reshape(bsz, nh, hp)
+        dtv = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+        a = -jnp.exp(p["A_log"])
+        decay = jnp.exp(dtv * a)  # [B,H]
+        h_new = state["h"] * decay[:, :, None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dtv, bm, xs
+        )
+        y = jnp.einsum("bn,bhpn->bhp", cm, h_new) + p["D"][None, :, None] * xs
+        y = y.reshape(bsz, 1, di)
+        new_state = {"h": h_new, "conv_x": hx[:, 1:], "conv_B": hb[:, 1:], "conv_C": hc[:, 1:]}
+    else:
+        xs = jax.nn.silu(_causal_depthwise_conv(xin, p["conv_x_w"], p["conv_x_b"], cfg.use_tcn_mapping))
+        bm = jax.nn.silu(_causal_depthwise_conv(bin_, p["conv_B_w"], p["conv_B_b"]))
+        cm = jax.nn.silu(_causal_depthwise_conv(cin, p["conv_C_w"], p["conv_C_b"]))
+        xs = xs.reshape(bsz, t, nh, hp)
+        if shard is not None:
+            xs = shard(xs, "batch", "seq", "heads", None)
+        dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,T,H]
+        h0 = jnp.zeros((bsz, nh, hp, n), jnp.float32) if state is None else state["h"]
+        y, h_fin = _ssd_chunked(
+            xs, dtv, p["A_log"], bm.astype(jnp.float32), cm.astype(jnp.float32), h0,
+            cfg.ssm_chunk,
+        )
+        y = y.astype(jnp.float32) + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(bsz, t, di)
+        if state is not None:
+            k = cfg.ssm_conv
+
+            def tail(v, cdtype):
+                pad = jnp.zeros((bsz, max(k - 1 - t, 0), v.shape[-1]), cdtype)
+                return jnp.concatenate([pad, v[:, -(k - 1):, :].astype(cdtype)], axis=1)[:, -(k - 1):, :]
+
+            new_state = {
+                "h": h_fin,
+                "conv_x": tail(xin, state["conv_x"].dtype),
+                "conv_B": tail(bin_, state["conv_B"].dtype),
+                "conv_C": tail(cin, state["conv_C"].dtype),
+            }
+
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    yg = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    yg = yg * jax.lax.rsqrt(jnp.mean(yg * yg, axis=-1, keepdims=True) + cfg.norm_eps)
+    yg = (yg * p["norm_g"].astype(jnp.float32)).astype(x.dtype)
+    out = linear(p["out_proj"], yg, quant=q, act_quant=aq)
+    return out, new_state
+
+
+def mamba_state_spec(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    k = cfg.ssm_conv
+    return {
+        "h": jax.ShapeDtypeStruct((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "conv_x": jax.ShapeDtypeStruct((batch, k - 1, cfg.d_inner), dtype),
+        "conv_B": jax.ShapeDtypeStruct((batch, k - 1, cfg.ssm_state), dtype),
+        "conv_C": jax.ShapeDtypeStruct((batch, k - 1, cfg.ssm_state), dtype),
+    }

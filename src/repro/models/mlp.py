@@ -1,0 +1,37 @@
+"""Dense FFN variants: SwiGLU / GeGLU / plain GELU (+bias)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import linear, linear_init
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None, dtype=jnp.float32):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    gated = cfg.mlp_type in ("swiglu", "geglu")
+    p = {
+        "w_up": linear_init(ks[1], cfg.d_model, d_ff, bias=cfg.mlp_bias, quant=cfg.quant, dtype=dtype),
+        "w_down": linear_init(ks[2], d_ff, cfg.d_model, bias=cfg.mlp_bias, quant=cfg.quant, dtype=dtype),
+    }
+    if gated:
+        p["w_gate"] = linear_init(ks[0], cfg.d_model, d_ff, bias=cfg.mlp_bias, quant=cfg.quant, dtype=dtype)
+    return p
+
+
+def mlp_forward(p, cfg: ModelConfig, x: jax.Array, *, shard=None) -> jax.Array:
+    q, aq = cfg.quant, cfg.act_quant
+    up = linear(p["w_up"], x, quant=q, act_quant=aq)
+    if cfg.mlp_type == "swiglu":
+        gate = linear(p["w_gate"], x, quant=q, act_quant=aq)
+        h = jax.nn.silu(gate) * up
+    elif cfg.mlp_type == "geglu":
+        gate = linear(p["w_gate"], x, quant=q, act_quant=aq)
+        h = jax.nn.gelu(gate, approximate=True) * up
+    else:
+        h = jax.nn.gelu(up, approximate=True)
+    if shard is not None:
+        h = shard(h, "batch", "seq", "mlp")
+    return linear(p["w_down"], h, quant=q, act_quant=aq)

@@ -1,0 +1,458 @@
+"""Unified LM: one model definition covering all 10 assigned architectures.
+
+An architecture is compiled into *segments*: maximal runs of identical layer
+structure.  Each segment is executed with ``lax.scan`` over stacked layer
+params (small HLO, fast 512-device compiles), with ``jax.checkpoint`` (remat)
+around the scanned body for training-memory sanity.
+
+    dense (qwen/glm/gemma/coder/internvl): [scan(L) {attn + dense-ffn}]
+    dbrx:                                  [scan(40) {attn + moe}]
+    deepseek-v2-lite: [unroll(1) {mla + dense}] + [scan(26) {mla + moe}]
+    jamba:            [scan(4)  {7x(mamba+ffn) + 1x(attn+ffn), moe period 2}]
+    mamba2:           [scan(48) {mamba}]
+    seamless (enc-dec): encoder [scan(12) {bidir attn + ffn}] +
+                        decoder [scan(12) {causal attn + cross-attn + ffn}]
+
+Modes: ``train`` (logits for loss), ``prefill`` (fills caches), ``decode``
+(one token; O(1)-state for SSM, cache-append for attention).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (
+    attn_init,
+    cross_attention,
+    cross_attn_init,
+    gqa_cache_spec,
+    gqa_forward,
+    mla_cache_spec,
+    mla_forward,
+)
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    apply_norm,
+    embed_init,
+    embed_lookup,
+    linear,
+    linear_init,
+    logits_from_embedding,
+    norm_init,
+)
+from repro.models.mamba2 import mamba_forward, mamba_init, mamba_state_spec
+from repro.models.mlp import mlp_forward, mlp_init
+from repro.models.moe import moe_forward, moe_init
+
+AUX_LOSS_COEF = 0.01
+
+
+def _noshard(x, *names):
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Segment plan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    n_steps: int
+    mixers: Tuple[str, ...]   # per sublayer in one period: attn | mla | mamba
+    ffns: Tuple[str, ...]     # dense | moe | none
+    causal: bool = True
+    cross_attn: bool = False
+
+    @property
+    def period(self) -> int:
+        return len(self.mixers)
+
+
+def build_segments(cfg: ModelConfig) -> List[Segment]:
+    cross = cfg.is_encdec
+    if cfg.is_ssm:
+        return [Segment(cfg.n_layers, ("mamba",), ("none",))]
+    if cfg.is_hybrid:
+        period = cfg.attn_layer_period
+        mixers = tuple(
+            "attn" if j == cfg.attn_layer_offset else "mamba" for j in range(period)
+        )
+        ffns = tuple(
+            "moe" if (cfg.is_moe and j % cfg.moe_layer_period == 1) else "dense"
+            for j in range(period)
+        )
+        assert cfg.n_layers % period == 0
+        return [Segment(cfg.n_layers // period, mixers, ffns)]
+    mixer = "mla" if cfg.attn_type == "mla" else "attn"
+    if cfg.is_moe:
+        segs = []
+        if cfg.first_dense_layers:
+            segs.append(Segment(cfg.first_dense_layers, (mixer,), ("dense",)))
+        segs.append(Segment(cfg.n_layers - cfg.first_dense_layers, (mixer,), ("moe",)))
+        return segs
+    return [Segment(cfg.n_layers, (mixer,), ("dense",), cross_attn=cross)]
+
+
+def encoder_segments(cfg: ModelConfig) -> List[Segment]:
+    return [Segment(cfg.n_enc_layers, ("attn",), ("dense",), causal=False)]
+
+
+# ---------------------------------------------------------------------------
+# Sublayer init / forward
+# ---------------------------------------------------------------------------
+
+def _sublayer_init(key, cfg: ModelConfig, mixer: str, ffn: str, cross: bool, dtype):
+    ks = jax.random.split(key, 5)
+    p: Dict[str, Any] = {"norm1": norm_init(cfg.d_model, norm_type=cfg.norm_type, dtype=dtype)}
+    if mixer == "mamba":
+        p["mamba"] = mamba_init(ks[0], cfg, dtype)
+    elif mixer == "mla":
+        p["attn"] = attn_init(ks[0], cfg, dtype)
+    else:
+        p["attn"] = attn_init(ks[0], cfg, dtype)
+    if cross:
+        p["norm_x"] = norm_init(cfg.d_model, norm_type=cfg.norm_type, dtype=dtype)
+        p["cross"] = cross_attn_init(ks[1], cfg, dtype)
+    if ffn == "dense":
+        p["norm2"] = norm_init(cfg.d_model, norm_type=cfg.norm_type, dtype=dtype)
+        p["mlp"] = mlp_init(ks[2], cfg, dtype=dtype)
+    elif ffn == "moe":
+        p["norm2"] = norm_init(cfg.d_model, norm_type=cfg.norm_type, dtype=dtype)
+        p["moe"] = moe_init(ks[2], cfg, dtype)
+    return p
+
+
+def _sublayer_forward(
+    p, cfg: ModelConfig, mixer: str, ffn: str, x, positions, *,
+    causal=True, cache=None, cache_len=None, enc_out=None, shard=_noshard,
+):
+    aux = jnp.zeros((), jnp.float32)
+    h = apply_norm(p["norm1"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+    # leave sequence parallelism at the mixer boundary: gather seq BEFORE the
+    # QKV/SSM projections so GSPMD reshards once here (a clean all-gather)
+    # instead of mid-attention (observed "involuntary full rematerialization"
+    # replicating q inside the flash chunk loop)
+    h = shard(h, "batch", None, "embed")
+    if mixer == "mamba":
+        mix, new_cache = mamba_forward(p["mamba"], cfg, h, state=cache, shard=shard)
+    elif mixer == "mla":
+        mix, new_cache = mla_forward(
+            p["attn"], cfg, h, positions, cache=cache, cache_len=cache_len,
+            absorbed_decode=cfg.mla_absorbed, shard=shard,
+        )
+    else:
+        mix, new_cache = gqa_forward(
+            p["attn"], cfg, h, positions, causal=causal,
+            cache=cache, cache_len=cache_len, shard=shard,
+        )
+    x = x + mix
+    if "cross" in p and enc_out is not None:
+        hx = apply_norm(p["norm_x"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+        x = x + cross_attention(p["cross"], cfg, hx, enc_out)
+    if ffn != "none":
+        h2 = apply_norm(p["norm2"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+        if ffn == "moe":
+            # MoE dispatch cumsums along the sequence: gather seq first
+            # (a seq-sharded cumsum replicates through GSPMD)
+            h2 = shard(h2, "batch", None, "embed")
+            y, aux = moe_forward(p["moe"], cfg, h2, shard=shard)
+        else:
+            y = mlp_forward(p["mlp"], cfg, h2, shard=shard)
+        x = x + y
+    x = shard(x, "batch", "res_seq", "embed")
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Segment execution (scan over stacked params)
+# ---------------------------------------------------------------------------
+
+def _segment_init(key, cfg: ModelConfig, seg: Segment, dtype):
+    def init_one(k):
+        kk = jax.random.split(k, seg.period)
+        return {
+            f"sub{j}": _sublayer_init(kk[j], cfg, seg.mixers[j], seg.ffns[j], seg.cross_attn, dtype)
+            for j in range(seg.period)
+        }
+
+    keys = jax.random.split(key, seg.n_steps)
+    if seg.n_steps == 1:
+        return jax.tree_util.tree_map(lambda a: a[None], init_one(keys[0]))
+    return jax.vmap(init_one)(keys)
+
+
+def _segment_cache_spec(cfg: ModelConfig, seg: Segment, batch: int, max_len: int, dtype):
+    def one():
+        out = {}
+        for j in range(seg.period):
+            m = seg.mixers[j]
+            if m == "mamba":
+                out[f"sub{j}"] = mamba_state_spec(cfg, batch, dtype)
+            elif m == "mla":
+                out[f"sub{j}"] = mla_cache_spec(cfg, batch, max_len, dtype)
+            else:
+                out[f"sub{j}"] = gqa_cache_spec(cfg, batch, max_len, dtype)
+        return out
+
+    spec = one()
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((seg.n_steps, *s.shape), s.dtype), spec
+    )
+
+
+def _segment_forward(
+    seg_params, cfg: ModelConfig, seg: Segment, x, positions, *,
+    cache=None, cache_len=None, enc_out=None, shard=_noshard,
+):
+    def step(carry, xs):
+        xc, aux_acc = carry
+        if cache is None:
+            (lp,) = xs
+            cache_in = None
+        else:
+            lp, cache_in = xs
+        new_caches = {}
+        for j in range(seg.period):
+            sub_cache = None if cache_in is None else cache_in.get(f"sub{j}")
+            xc, c_out, aux_j = _sublayer_forward(
+                lp[f"sub{j}"], cfg, seg.mixers[j], seg.ffns[j], xc, positions,
+                causal=seg.causal, cache=sub_cache, cache_len=cache_len,
+                enc_out=enc_out, shard=shard,
+            )
+            new_caches[f"sub{j}"] = c_out if c_out is not None else {}
+            aux_acc = aux_acc + aux_j
+        return (xc, aux_acc), (new_caches if cache_in is not None else None)
+
+    body = step
+    if cfg.remat:
+        body = jax.checkpoint(step, prevent_cse=False)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if cache is None:
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), (seg_params,), unroll=cfg.scan_unroll)
+        return x, None, aux
+
+    (x, aux), new_cache = jax.lax.scan(
+        body, (x, aux0), (seg_params, cache), unroll=cfg.scan_unroll
+    )
+    return x, new_cache, aux
+
+
+def _unpack_scan_xs(xs):
+    return xs
+
+
+# ---------------------------------------------------------------------------
+# Full model
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    segs = build_segments(cfg)
+    ks = jax.random.split(key, len(segs) + 5)
+    params: Dict[str, Any] = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": norm_init(cfg.d_model, norm_type=cfg.norm_type, dtype=dtype),
+    }
+    for i, seg in enumerate(segs):
+        params[f"seg{i}"] = _segment_init(ks[1 + i], cfg, seg, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = linear_init(ks[-1], cfg.d_model, cfg.vocab_size, quant=cfg.quant, dtype=dtype)
+    if cfg.is_encdec:
+        esegs = encoder_segments(cfg)
+        params["enc"] = {
+            "norm": norm_init(cfg.d_model, norm_type=cfg.norm_type, dtype=dtype),
+        }
+        for i, seg in enumerate(esegs):
+            params["enc"][f"seg{i}"] = _segment_init(ks[-2 - i], cfg, seg, dtype)
+    return params
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    spec: Dict[str, Any] = {
+        f"seg{i}": _segment_cache_spec(cfg, seg, batch, max_len, dtype)
+        for i, seg in enumerate(build_segments(cfg))
+    }
+    spec["len"] = jax.ShapeDtypeStruct((), jnp.int32)
+    if cfg.is_encdec:
+        spec["enc_out"] = jax.ShapeDtypeStruct((batch, cfg.enc_seq_len, cfg.d_model), dtype)
+    return spec
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_spec(cfg, batch, max_len, dtype)
+    )
+
+
+def _encode(params, cfg: ModelConfig, enc_embeds, shard=_noshard):
+    x = enc_embeds
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    for i, seg in enumerate(encoder_segments(cfg)):
+        x, _, _ = _segment_forward(
+            params["enc"][f"seg{i}"], cfg, seg, x, positions, shard=shard
+        )
+    return apply_norm(params["enc"]["norm"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+
+
+@dataclasses.dataclass
+class ModelOutput:
+    logits: jax.Array
+    cache: Optional[dict]
+    aux_loss: jax.Array
+
+
+def forward(
+    params,
+    cfg: ModelConfig,
+    tokens: jax.Array,
+    *,
+    mode: str = "train",
+    cache: Optional[dict] = None,
+    frontend_embeds: Optional[jax.Array] = None,
+    enc_embeds: Optional[jax.Array] = None,
+    shard=_noshard,
+    logits_mode: str = "all",
+) -> ModelOutput:
+    """tokens: [B, S] int32 (S=1 for decode).
+
+    frontend_embeds: [B, P, D] stub patch/frame embeddings (vlm/audio),
+    prepended to the token sequence in train/prefill.
+    enc_embeds: [B, S_enc, D] stub audio frames for the enc-dec encoder.
+    logits_mode: "all" | "last" (prefill wants only the sampling position —
+    a full [B, 32k, 150k-vocab] logits tensor is ~20 GiB/device) | "hidden"
+    (return final hidden states in .logits; the chunked-CE loss consumes
+    them without ever materializing [B, S, V]).
+    """
+    b, s = tokens.shape
+    x = embed_lookup(params["embed"], tokens, scale=cfg.embed_scale)
+    x = x.astype(jnp.dtype(cfg.dtype))
+    n_front = 0
+    if frontend_embeds is not None and mode != "decode":
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+        n_front = frontend_embeds.shape[1]
+    x = shard(x, "batch", "res_seq", "embed")
+    seq = x.shape[1]
+
+    enc_out = None
+    if cfg.is_encdec:
+        if mode == "decode":
+            enc_out = cache["enc_out"].astype(x.dtype)
+        else:
+            assert enc_embeds is not None, "enc-dec model needs enc_embeds"
+            enc_out = _encode(params, cfg, enc_embeds.astype(x.dtype), shard=shard)
+
+    if mode == "decode":
+        cache_len = cache["len"]
+        positions = jnp.broadcast_to(jnp.reshape(cache_len, (1, 1)), (b, 1))
+    else:
+        cache_len = None
+        positions = jnp.broadcast_to(jnp.arange(seq)[None], (b, seq))
+
+    new_cache = {} if cache is not None else None
+    aux_total = jnp.zeros((), jnp.float32)
+    for i, seg in enumerate(build_segments(cfg)):
+        seg_cache = None if cache is None else cache[f"seg{i}"]
+        x, seg_new, aux = _segment_forward(
+            params[f"seg{i}"], cfg, seg, x, positions,
+            cache=seg_cache, cache_len=cache_len, enc_out=enc_out, shard=shard,
+        )
+        aux_total = aux_total + aux
+        if new_cache is not None:
+            new_cache[f"seg{i}"] = seg_new
+
+    x = apply_norm(params["final_norm"], x, norm_type=cfg.norm_type, eps=cfg.norm_eps)
+    if n_front:
+        x = x[:, n_front:, :]
+    if logits_mode == "hidden":
+        logits = x
+    else:
+        if logits_mode == "last":
+            x = x[:, -1:, :]
+        if cfg.tie_embeddings:
+            logits = logits_from_embedding(params["embed"], x)
+        else:
+            logits = linear(params["lm_head"], x, quant=cfg.quant)
+        if cfg.logit_softcap:
+            logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+        logits = shard(logits, "batch", "seq", "vocab")
+
+    if new_cache is not None:
+        new_cache["len"] = (cache["len"] + 1) if mode == "decode" else jnp.asarray(seq, jnp.int32)
+        if cfg.is_encdec:
+            new_cache["enc_out"] = enc_out.astype(cache["enc_out"].dtype) if mode != "decode" else cache["enc_out"]
+
+    return ModelOutput(logits=logits, cache=new_cache, aux_loss=aux_total)
+
+
+def _ce_chunk(hidden_c, targets_c, head_w, softcap):
+    """CE over one sequence chunk.  hidden_c: [B, c, D]; head_w: [D, V]."""
+    logits = jnp.dot(hidden_c, head_w.astype(hidden_c.dtype)).astype(jnp.float32)
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    mask = targets_c >= 0
+    tgt = jnp.maximum(targets_c, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    return jnp.sum((logz - gold) * mask), jnp.sum(mask)
+
+
+def chunked_ce_loss(hidden, targets, head_w, *, softcap=0.0, chunk: int = 512):
+    """Sequence-chunked cross-entropy: the full [B, S, V] logits tensor never
+    materializes (150k-vocab x 4k-seq logits are GBs/device; per-chunk blocks
+    are ~100x smaller).  jax.checkpoint recomputes per-chunk logits in the
+    backward pass instead of storing softmax residuals per chunk."""
+    b, s, d = hidden.shape
+    c = min(chunk, s)
+    pad = (-s) % c
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)), constant_values=-1)
+    n = hidden.shape[1] // c
+    hc = hidden.reshape(b, n, c, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(b, n, c).transpose(1, 0, 2)
+
+    def _body(carry, xs):
+        nll, nt = _ce_chunk(xs[0], xs[1], head_w, softcap)
+        return (carry[0] + nll, carry[1] + nt), None
+
+    body = jax.checkpoint(_body, prevent_cse=False)
+    (nll, ntok), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (hc, tc))
+    return nll / jnp.maximum(ntok, 1), ntok
+
+
+def lm_loss(
+    params, cfg: ModelConfig, tokens, targets, *,
+    frontend_embeds=None, enc_embeds=None, shard=_noshard,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross-entropy (+ MoE aux).  targets: [B, S] int32, already
+    shifted by the data pipeline; -1 entries are masked."""
+    out = forward(
+        params, cfg, tokens, mode="train", logits_mode="hidden",
+        frontend_embeds=frontend_embeds, enc_embeds=enc_embeds, shard=shard,
+    )
+    head_w = (
+        params["embed"]["table"].T if cfg.tie_embeddings else _dense_w(params["lm_head"])
+    )
+    if cfg.quant == "ternary" and not cfg.tie_embeddings:
+        from repro.core.ternary import ste_ternary_weights
+
+        head_w = ste_ternary_weights(head_w, 0.7)
+    loss, ntok = chunked_ce_loss(
+        out.logits, targets, head_w, softcap=cfg.logit_softcap
+    )
+    total = loss + AUX_LOSS_COEF * out.aux_loss
+    return total, {"loss": loss, "aux": out.aux_loss, "ntok": ntok}
+
+
+def _dense_w(p):
+    if "w" in p:
+        return p["w"]
+    from repro.core.ternary import unpack_ternary
+
+    w = unpack_ternary(p["packed"], axis=0).astype(jnp.float32)
+    return w * p["scale"].astype(jnp.float32)[None, :]

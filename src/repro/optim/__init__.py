@@ -1,0 +1,16 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    lr_schedule,
+)
+from repro.optim.compress import (
+    CompressedGrad,
+    compress_with_feedback,
+    decompress,
+    init_residuals,
+    wire_bytes,
+)

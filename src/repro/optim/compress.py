@@ -1,0 +1,103 @@
+"""Ternary gradient compression with error feedback — the paper's ternary
+insight applied to the interconnect (TernGrad-style, + EF-SGD residuals).
+
+At 1000+-node scale the gradient all-reduce dominates step time for DP-heavy
+configs.  Compressing gradients to {-1, 0, +1} x per-tensor scale cuts wire
+bytes 16x vs f32 (2 bits + one scalar), at the cost of noise that error
+feedback provably absorbs (Karimireddy et al., 2019).
+
+Usage inside a train step (DP all-reduce happens on the compressed rep):
+
+    cg, new_residual = compress_with_feedback(grads, residual)
+    grads_hat = decompress(cg)          # what the optimizer consumes
+
+Under pjit, the compression is applied *before* the pseudo-all-reduce point
+so XLA moves 2-bit (uint8-packed) tensors across the DP axis instead of f32.
+The exactness contract is property-tested: compress -> decompress -> residual
+bookkeeping never loses mass (EMA of residual norm is bounded).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ternary import pack_ternary, unpack_ternary
+
+
+class CompressedGrad(NamedTuple):
+    packed: jax.Array   # uint8, flat [ceil(n/4)]
+    scale: jax.Array    # f32 scalar
+    n: int              # original element count (static)
+
+
+def _compress_leaf(g: jax.Array, residual: jax.Array) -> Tuple[CompressedGrad, jax.Array]:
+    gf = g.astype(jnp.float32) + residual
+    flat = gf.reshape(-1)
+    n = flat.shape[0]
+    scale = jnp.mean(jnp.abs(flat)) + 1e-12
+    # stochastic-free deterministic ternarization at threshold = scale/2
+    t = jnp.where(jnp.abs(flat) > 0.5 * scale, jnp.sign(flat), 0.0)
+    # alpha = <g, t> / <t, t>  (least-squares optimal scale for this support)
+    tt = jnp.maximum(jnp.sum(t * t), 1.0)
+    alpha = jnp.sum(flat * t) / tt
+    approx = alpha * t
+    new_residual = (gf - approx.reshape(gf.shape)).astype(residual.dtype)
+    pad = (-n) % 4
+    tp = jnp.pad(t.astype(jnp.int8), (0, pad))
+    return CompressedGrad(pack_ternary(tp, axis=0), alpha.astype(jnp.float32), n), new_residual
+
+
+def _decompress_leaf(c: CompressedGrad, shape, dtype) -> jax.Array:
+    t = unpack_ternary(c.packed, axis=0).astype(jnp.float32)[: c.n]
+    return (c.scale * t).reshape(shape).astype(dtype)
+
+
+def init_residuals(params) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32)
+        if jnp.issubdtype(p.dtype, jnp.floating)
+        else jnp.zeros((), jnp.float32),
+        params,
+    )
+
+
+def compress_with_feedback(grads, residuals):
+    """Returns (compressed pytree, new residuals).  Non-float leaves pass
+    through untouched."""
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = tdef.flatten_up_to(residuals)
+    comp, new_r = [], []
+    for g, r in zip(flat_g, flat_r):
+        if not jnp.issubdtype(g.dtype, jnp.floating) or g.ndim == 0:
+            comp.append(g)
+            new_r.append(r)
+            continue
+        c, nr = _compress_leaf(g, r)
+        comp.append(c)
+        new_r.append(nr)
+    return tdef.unflatten(comp), tdef.unflatten(new_r)
+
+
+def decompress(compressed, grads_like):
+    flat_c, tdef = jax.tree_util.tree_flatten(
+        compressed, is_leaf=lambda x: isinstance(x, CompressedGrad)
+    )
+    flat_g = tdef.flatten_up_to(grads_like)
+    out = []
+    for c, g in zip(flat_c, flat_g):
+        if isinstance(c, CompressedGrad):
+            out.append(_decompress_leaf(c, g.shape, g.dtype))
+        else:
+            out.append(c)
+    return tdef.unflatten(out)
+
+
+def wire_bytes(grads) -> Tuple[int, int]:
+    """(f32 bytes, compressed bytes) — the 16x the roofline sees."""
+    f32 = sum(x.size * 4 for x in jax.tree_util.tree_leaves(grads))
+    comp = sum(
+        -(-x.size // 4) + 4 for x in jax.tree_util.tree_leaves(grads)
+    )
+    return f32, comp

@@ -1,0 +1,147 @@
+"""Validation of the CUTIE analytical silicon model against the paper."""
+import math
+
+import pytest
+
+from repro.core.cutie_arch import (
+    KAPPA_PAPER_OPS,
+    OPS_PER_CYCLE_PHYSICAL,
+    PAPER,
+    Calibration,
+    ConvLayer,
+    CutieHW,
+    apply_calibration,
+    calibrate,
+    cifar10_9layer_layers,
+    dvs_cnn_tcn_layers,
+    evaluate_network,
+    layer_cycles,
+    layer_utilization,
+    voltage_sweep,
+)
+
+
+@pytest.fixture(scope="module")
+def hw():
+    return CutieHW()
+
+
+@pytest.fixture(scope="module")
+def cifar_report(hw):
+    return evaluate_network("cifar10", cifar10_9layer_layers(), hw, 0.5)
+
+
+class TestArchitectureConstants:
+    def test_physical_peak(self):
+        assert OPS_PER_CYCLE_PHYSICAL == 165_888
+
+    def test_tcn_memory_size(self):
+        assert PAPER["tcn_mem_bytes"] == PAPER["tcn_steps"] * 96 * 2 // 8
+
+    def test_paper_op_convention_factor(self):
+        # documented discrepancy between paper peak counting and 2*MACs
+        assert 1.5 < KAPPA_PAPER_OPS < 1.8
+
+
+class TestVoltageScaling:
+    def test_peak_eff_0v9_matches_paper(self, hw):
+        """CV^2: 1036 * (0.5/0.9)^2 = 319.8 — paper reports 318 TOp/s/W."""
+        eff_0v9 = KAPPA_PAPER_OPS / hw.e_op_j(0.9) / 1e12
+        assert abs(eff_0v9 - PAPER["peak_eff_0v9_topsw"]) / PAPER["peak_eff_0v9_topsw"] < 0.02
+
+    def test_peak_eff_0v5_calibration(self, hw):
+        eff = KAPPA_PAPER_OPS / hw.e_op_j(0.5) / 1e12
+        assert abs(eff - PAPER["peak_eff_0v5_topsw"]) < 1.0
+
+    def test_peak_tput_scaling(self, hw, cifar_report):
+        r9 = evaluate_network("cifar10", cifar10_9layer_layers(), hw, 0.9)
+        ratio = r9.peak_tput_tops_paper / cifar_report.peak_tput_tops_paper
+        assert abs(ratio - 51.7 / 14.9) < 0.01
+
+    def test_soa_improvement_factor(self):
+        """Paper claims 1.67x over the 10nm binary accelerator [8]."""
+        assert abs(PAPER["peak_eff_0v5_topsw"] / PAPER["soa_binary_10nm_topsw"] - 1.67) < 0.02
+
+    def test_monotone_sweep(self, hw):
+        reports = voltage_sweep(cifar10_9layer_layers(), hw, "cifar10")
+        tputs = [r.avg_tops for r in reports]
+        energies = [r.energy_j for r in reports]
+        assert all(a < b for a, b in zip(tputs, tputs[1:]))       # faster at higher V
+        assert all(a < b for a, b in zip(energies, energies[1:]))  # costlier at higher V
+
+
+class TestCycleModel:
+    def test_full_width_layer_is_pixel_per_cycle(self, hw):
+        l = ConvLayer(16, 16, 96, 96)
+        assert layer_cycles(l, hw) == 16 * 16 + 2 * 16  # pixels + linebuffer prime
+
+    def test_wide_layer_tiles(self, hw):
+        l = ConvLayer(16, 16, 192, 192)
+        assert layer_cycles(l, hw) == 4 * (16 * 16 + 2 * 16)
+
+    def test_utilization_input_layer(self, hw):
+        """CIFAR layer 1 has 3/96 input channels — low MAC utilization."""
+        u = layer_utilization(ConvLayer(32, 32, 3, 96), hw)
+        assert u < 0.05
+
+    def test_utilization_bounded(self, hw):
+        for l in cifar10_9layer_layers():
+            assert 0 < layer_utilization(l, hw) <= 1.0
+
+
+class TestCalibration:
+    def test_cifar_calibration_consistency(self, cifar_report):
+        """The heart of the model validation: the cycle-overhead factor
+        implied by the paper's measured inf/s and the energy-overhead factor
+        implied by the measured uJ/inference must agree (same silicon, same
+        run) — and they do, within 25%."""
+        cal = calibrate(cifar_report, PAPER["cifar_inf_per_s"], PAPER["cifar_energy_uj"])
+        assert cal.consistent, (cal.cycle_overhead, cal.energy_overhead)
+
+    def test_calibrated_matches_paper(self, cifar_report):
+        cal = calibrate(cifar_report, PAPER["cifar_inf_per_s"], PAPER["cifar_energy_uj"])
+        r = apply_calibration(cifar_report, cal)
+        assert abs(r.inf_per_s - PAPER["cifar_inf_per_s"]) / PAPER["cifar_inf_per_s"] < 1e-6
+        assert abs(r.energy_j * 1e6 - PAPER["cifar_energy_uj"]) / PAPER["cifar_energy_uj"] < 1e-6
+
+    def test_ideal_is_upper_bound(self, cifar_report):
+        """Ideal schedule must be faster & lower-energy than measured silicon."""
+        assert cifar_report.inf_per_s > PAPER["cifar_inf_per_s"]
+        assert cifar_report.energy_j * 1e6 < PAPER["cifar_energy_uj"]
+
+    def test_order_of_magnitude(self, cifar_report):
+        """Ideal model within one order of magnitude of silicon on all axes."""
+        assert cifar_report.inf_per_s / PAPER["cifar_inf_per_s"] < 10
+        assert PAPER["cifar_energy_uj"] / (cifar_report.energy_j * 1e6) < 10
+
+
+class TestDVSNetwork:
+    def test_dvs_shapes_fit_hardware(self, hw):
+        for l in dvs_cnn_tcn_layers():
+            assert l.h_out <= hw.max_fmap and l.w_out <= hw.max_fmap
+            assert l.c_out <= hw.n_ocu or l.c_out % hw.n_ocu == 0
+
+    def test_dvs_tcn_layers_use_mapped_form(self):
+        from repro.core.cutie_arch import dvs_tcn_layers
+
+        tcn = dvs_tcn_layers()
+        assert len(tcn) == 4
+        # mapped shape: (ceil(24/D), D) for D = 1,2,4,8
+        assert [(l.h_out, l.w_out) for l in tcn] == [(24, 1), (12, 2), (6, 4), (3, 8)]
+
+    def test_dvs_cnn_pass_rate_near_paper(self, hw):
+        """Paper: 8000 inf/s at 0.5 V, where an 'inference' is one CNN pass
+        feeding the TCN memory (the memory amortizes past time steps).  The
+        ideal schedule must land within ~1.5x above the measured silicon."""
+        from repro.core.cutie_arch import dvs_cnn_layers
+
+        cnn = evaluate_network("dvs-cnn-pass", dvs_cnn_layers(), hw, 0.5)
+        assert PAPER["dvs_inf_per_s"] < cnn.inf_per_s < 1.5 * PAPER["dvs_inf_per_s"]
+
+    def test_dvs_energy_calibration_factor_matches_cifar(self, hw, cifar_report):
+        """Energy overhead (measured avg pJ/op vs peak-calibrated pJ/op) must
+        be in the same band for both networks — same silicon."""
+        rd = evaluate_network("dvs", dvs_cnn_tcn_layers(), hw, 0.5)
+        cal_d = calibrate(rd, PAPER["dvs_inf_per_s"] / 5.0, PAPER["dvs_energy_uj"])
+        cal_c = calibrate(cifar_report, PAPER["cifar_inf_per_s"], PAPER["cifar_energy_uj"])
+        assert 0.5 < cal_d.energy_overhead / cal_c.energy_overhead < 2.0

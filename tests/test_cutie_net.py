@@ -1,0 +1,109 @@
+"""The paper's networks: QAT trainability, deploy path, streaming memory."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.data.pipeline import CifarLikePipeline, DVSEventPipeline
+from repro.models.cutie_net import (
+    CIFAR_TNN,
+    DVS_CNN_TCN,
+    cnn_forward_deploy,
+    cnn_forward_qat,
+    dvs_forward_qat,
+    init_cutie_params,
+    make_stream,
+    quantize_for_deploy,
+    stream_step,
+    tcn_forward_deploy,
+    tcn_forward_qat,
+)
+
+
+class TestCifarTNN:
+    def test_forward_shapes(self):
+        p = init_cutie_params(jax.random.PRNGKey(0), CIFAR_TNN)
+        x = jnp.sign(jax.random.normal(jax.random.PRNGKey(1), (4, 32, 32, 3)))
+        logits = cnn_forward_qat(p, CIFAR_TNN, x)
+        assert logits.shape == (4, 10)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_qat_training_reduces_loss(self):
+        """QAT (STE) steps on synthetic class-separable data must reduce
+        cross-entropy — the training recipe behind the paper's 86%."""
+        pipe = CifarLikePipeline(32, seed=0, noise=0.5)
+        params = init_cutie_params(jax.random.PRNGKey(2), CIFAR_TNN)
+
+        def loss_fn(p, x, y):
+            logits = cnn_forward_qat(p, CIFAR_TNN, x)
+            return -jnp.mean(
+                jnp.take_along_axis(jax.nn.log_softmax(logits), y[:, None], axis=1)
+            )
+
+        lr = 1e-3
+
+        @jax.jit
+        def step(p, mom, x, y):
+            l, g = jax.value_and_grad(loss_fn)(p, x, y)
+            mom = jax.tree_util.tree_map(lambda m, gg: 0.9 * m + gg, mom, g)
+            p = jax.tree_util.tree_map(lambda pp, m: pp - lr * m, p, mom)
+            return p, mom, l
+
+        mom = jax.tree_util.tree_map(jnp.zeros_like, params)
+        losses = []
+        for _ in range(120):
+            x, y = pipe.next_batch()
+            params, mom, l = step(params, mom, x, y)
+            losses.append(float(l))
+        # initial CE ~3.9 (10 classes + margin); converges towards ~2.4
+        assert np.mean(losses[-10:]) < 0.75 * losses[0], (losses[0], losses[-10:])
+
+
+class TestDVSHybrid:
+    def test_full_pipeline_shapes(self):
+        p = init_cutie_params(jax.random.PRNGKey(0), DVS_CNN_TCN)
+        pipe = DVSEventPipeline(2, steps=5, seed=0)
+        frames, labels = pipe.next_batch()
+        logits = dvs_forward_qat(p, DVS_CNN_TCN, frames)
+        assert logits.shape == (2, 12)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_streaming_equals_batch_window(self):
+        """The TCN ring memory must produce the same logits as running the
+        TCN over the equivalent zero-padded batch window — the silicon's
+        memory is functionally transparent."""
+        p = init_cutie_params(jax.random.PRNGKey(1), DVS_CNN_TCN)
+        dep = quantize_for_deploy(p, DVS_CNN_TCN)
+        pipe = DVSEventPipeline(2, steps=4, seed=1)
+        frames, _ = pipe.next_batch()
+
+        stream = make_stream(DVS_CNN_TCN, batch=2)
+        for t in range(4):
+            logits_stream, stream = stream_step(dep, DVS_CNN_TCN, stream, frames[:, t])
+
+        feats = [cnn_forward_deploy(dep, DVS_CNN_TCN, frames[:, t]) for t in range(4)]
+        window = jnp.stack(feats, axis=1)  # [B, 4, C]
+        padded = jnp.concatenate(
+            [jnp.zeros((2, DVS_CNN_TCN.tcn_steps - 4, window.shape[-1])), window], axis=1
+        )
+        logits_batch = tcn_forward_deploy(dep, DVS_CNN_TCN, padded)
+        np.testing.assert_allclose(
+            np.asarray(logits_stream), np.asarray(logits_batch), rtol=1e-5, atol=1e-5
+        )
+
+    def test_deploy_weights_are_2bit(self):
+        p = init_cutie_params(jax.random.PRNGKey(2), DVS_CNN_TCN)
+        dep = quantize_for_deploy(p, DVS_CNN_TCN)
+        for lp in dep["conv"] + dep["tcn"]:
+            assert lp["packed"].dtype == jnp.uint8
+        # total deployed conv+tcn weight bytes comfortably under CUTIE's
+        # on-chip weight buffer budget scale (hundreds of KB)
+        total = sum(int(np.prod(lp["packed"].shape)) for lp in dep["conv"] + dep["tcn"])
+        assert total < 1.5e6
+
+    def test_tcn_memory_silicon_budget(self):
+        """24 steps x 96 ch x 2 b = 576 B — the ring buffer matches the
+        paper's SCM dimensioning when ternarized."""
+        s = make_stream(DVS_CNN_TCN)
+        n_values = s.buf.shape[-2] * s.buf.shape[-1]
+        assert n_values * 2 // 8 == 576

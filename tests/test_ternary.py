@@ -1,0 +1,133 @@
+"""Unit + property tests for the ternary quantization core."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ternary import (
+    pack_ternary,
+    unpack_ternary,
+    packed_nbytes,
+    sparsity,
+    ste_ternary_acts,
+    ste_ternary_weights,
+    ternary_quantize_acts,
+    ternary_quantize_weights,
+)
+
+
+class TestQuantizers:
+    def test_weight_values_are_ternary(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (128, 64))
+        t, alpha = ternary_quantize_weights(w)
+        assert set(np.unique(np.asarray(t))).issubset({-1, 0, 1})
+        assert float(alpha) > 0
+
+    def test_per_channel_scale_shape(self):
+        w = jax.random.normal(jax.random.PRNGKey(1), (128, 64))
+        t, alpha = ternary_quantize_weights(w, axis=0)
+        assert alpha.shape == (1, 64)
+        assert t.shape == w.shape
+
+    def test_twn_threshold_monotone(self):
+        """Larger nu -> more zeros (sparser)."""
+        w = jax.random.normal(jax.random.PRNGKey(2), (256, 256))
+        s = [float(sparsity(ternary_quantize_weights(w, nu=nu)[0])) for nu in (0.3, 0.7, 1.2)]
+        assert s[0] < s[1] < s[2]
+
+    def test_quantized_approximates_weights(self):
+        """alpha*t should be the best ternary L2 approximation direction:
+        correlation with w must be strongly positive."""
+        w = jax.random.normal(jax.random.PRNGKey(3), (512,))
+        t, alpha = ternary_quantize_weights(w)
+        approx = alpha * t.astype(jnp.float32)
+        corr = float(jnp.sum(approx * w) / (jnp.linalg.norm(approx) * jnp.linalg.norm(w)))
+        assert corr > 0.8
+
+    def test_act_quantizer_values(self):
+        x = jnp.linspace(-2, 2, 41)
+        q = ternary_quantize_acts(x, threshold=0.5)
+        assert set(np.unique(np.asarray(q))).issubset({-1.0, 0.0, 1.0})
+        assert q[0] == -1 and q[-1] == 1 and q[20] == 0
+
+    def test_signs_match(self):
+        w = jax.random.normal(jax.random.PRNGKey(4), (333,))
+        t, _ = ternary_quantize_weights(w)
+        nz = np.asarray(t) != 0
+        assert (np.sign(np.asarray(w))[nz] == np.asarray(t)[nz]).all()
+
+
+class TestSTE:
+    def test_forward_ternary(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+        q = ste_ternary_weights(w, 0.7)
+        vals = np.unique(np.asarray(q))
+        # values are {-alpha, 0, alpha}
+        assert len(vals) <= 3
+
+    def test_gradient_passes_through(self):
+        w = jax.random.normal(jax.random.PRNGKey(1), (32,))
+        g = jax.grad(lambda w: jnp.sum(ste_ternary_weights(w, 0.7)))(w)
+        assert np.isfinite(np.asarray(g)).all()
+        assert float(jnp.sum(jnp.abs(g))) > 0  # not all clipped
+
+    def test_act_ste_gradient_window(self):
+        x = jnp.array([-10.0, -0.4, 0.0, 0.4, 10.0])
+        g = jax.grad(lambda x: jnp.sum(ste_ternary_acts(x, 0.5)))(x)
+        assert g[0] == 0 and g[-1] == 0  # saturated
+        assert g[1] == 1 and g[2] == 1 and g[3] == 1
+
+    def test_qat_training_signal(self):
+        """A tiny ternary regression must reduce loss — QAT sanity."""
+        key = jax.random.PRNGKey(7)
+        x = jax.random.normal(key, (256, 16))
+        w_true = jax.random.normal(jax.random.PRNGKey(8), (16, 1))
+        y = x @ jnp.sign(w_true)
+
+        def loss(w):
+            return jnp.mean((x @ ste_ternary_weights(w, 0.7) - y) ** 2)
+
+        w = jax.random.normal(jax.random.PRNGKey(9), (16, 1)) * 0.1
+        l0 = float(loss(w))
+        for _ in range(200):
+            w = w - 0.05 * jax.grad(loss)(w)
+        assert float(loss(w)) < 0.5 * l0
+
+
+class TestPacking:
+    @given(
+        rows=st.integers(1, 9),
+        groups=st.integers(1, 9),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_roundtrip_property(self, rows, groups, seed):
+        k = 4 * groups
+        rng = np.random.RandomState(seed)
+        t = rng.randint(-1, 2, size=(rows, k)).astype(np.int8)
+        p = pack_ternary(jnp.asarray(t), axis=-1)
+        u = unpack_ternary(p, axis=-1)
+        np.testing.assert_array_equal(np.asarray(u), t)
+
+    def test_roundtrip_axis0(self):
+        t = np.random.RandomState(0).randint(-1, 2, size=(16, 5)).astype(np.int8)
+        p = pack_ternary(jnp.asarray(t), axis=0)
+        assert p.shape == (4, 5)
+        np.testing.assert_array_equal(np.asarray(unpack_ternary(p, axis=0)), t)
+
+    def test_compression_ratio(self):
+        assert packed_nbytes((1024, 1024)) == 1024 * 256  # 4x vs int8, 8x vs bf16
+
+    def test_bad_axis_length(self):
+        with pytest.raises(ValueError):
+            pack_ternary(jnp.zeros((3, 7), jnp.int8))
+
+    def test_dot_product_preserved(self):
+        """Packed-weights matmul must equal the unpacked one exactly."""
+        rng = np.random.RandomState(1)
+        t = rng.randint(-1, 2, size=(64, 32)).astype(np.int8)
+        x = rng.randn(8, 64).astype(np.float32)
+        y_ref = x @ t.astype(np.float32)
+        u = np.asarray(unpack_ternary(pack_ternary(jnp.asarray(t), axis=0), axis=0))
+        np.testing.assert_allclose(x @ u.astype(np.float32), y_ref, rtol=1e-6)
