@@ -5,45 +5,46 @@
   * fig5()    — energy/inference + inferences/sec vs voltage, CIFAR + DVS.
   * fig6()    — peak energy efficiency + peak throughput vs voltage.
 
-Each returns rows and validates against the paper's reported numbers where
-the paper is internally consistent; discrepancies are printed with the
-calibration factor (see EXPERIMENTS.md §Paper-validation).
+The layer lists come from the `repro.api` registry graphs — the SAME graphs
+that drive QAT/deployment — lowered through `export_conv_layers`, so these
+tables stay in lockstep with the executable models.  Each row validates
+against the paper's reported numbers where the paper is internally
+consistent; discrepancies are printed with the calibration factor.
 """
 from __future__ import annotations
 
+from repro.api import export_conv_layers, get_graph, silicon_report
 from repro.core.cutie_arch import (
-    KAPPA_PAPER_OPS,
     PAPER,
     CutieHW,
     apply_calibration,
     calibrate,
-    cifar10_9layer_layers,
-    dvs_cnn_layers,
-    dvs_cnn_tcn_layers,
     evaluate_network,
     voltage_sweep,
 )
 
 HW = CutieHW()
 
+CIFAR_GRAPH = get_graph("cifar10_tnn")
+DVS_GRAPH = get_graph("dvs_cnn_tcn")
+
 
 def table1():
-    """Table 1 comparison rows; returns list of (name, value, paper, ratio)."""
-    r05 = evaluate_network("cifar10", cifar10_9layer_layers(), HW, 0.5)
-    r09 = evaluate_network("cifar10", cifar10_9layer_layers(), HW, 0.9)
-    cal = calibrate(r05, PAPER["cifar_inf_per_s"], PAPER["cifar_energy_uj"])
-    c05 = apply_calibration(r05, cal)
+    """Table 1 comparison rows; returns list of (name, value, paper)."""
+    r05 = silicon_report(CIFAR_GRAPH, v=0.5, hw=HW)
+    r09 = silicon_report(CIFAR_GRAPH, v=0.9, hw=HW)
+    cal = r05.calibration
     rows = [
-        ("peak_eff_0.5V_TOp/s/W", r05.peak_layer_eff_topsw_paper, PAPER["peak_eff_0v5_topsw"]),
-        ("peak_eff_0.9V_TOp/s/W", r09.peak_layer_eff_topsw_paper, PAPER["peak_eff_0v9_topsw"]),
-        ("peak_tput_0.5V_TOp/s", r05.peak_tput_tops_paper, PAPER["peak_tput_0v5_tops"]),
-        ("peak_tput_0.9V_TOp/s", r09.peak_tput_tops_paper, PAPER["peak_tput_0v9_tops"]),
-        ("cifar_energy_uJ(calibrated)", c05.energy_j * 1e6, PAPER["cifar_energy_uj"]),
-        ("cifar_inf_per_s(calibrated)", c05.inf_per_s, PAPER["cifar_inf_per_s"]),
-        ("cifar_energy_uJ(ideal)", r05.energy_j * 1e6, PAPER["cifar_energy_uj"]),
+        ("peak_eff_0.5V_TOp/s/W", r05.peak_eff_topsw, PAPER["peak_eff_0v5_topsw"]),
+        ("peak_eff_0.9V_TOp/s/W", r09.peak_eff_topsw, PAPER["peak_eff_0v9_topsw"]),
+        ("peak_tput_0.5V_TOp/s", r05.ideal.peak_tput_tops_paper, PAPER["peak_tput_0v5_tops"]),
+        ("peak_tput_0.9V_TOp/s", r09.ideal.peak_tput_tops_paper, PAPER["peak_tput_0v9_tops"]),
+        ("cifar_energy_uJ(calibrated)", r05.energy_uj, PAPER["cifar_energy_uj"]),
+        ("cifar_inf_per_s(calibrated)", r05.inf_per_s, PAPER["cifar_inf_per_s"]),
+        ("cifar_energy_uJ(ideal)", r05.ideal.energy_j * 1e6, PAPER["cifar_energy_uj"]),
         ("soa_improvement_vs_[8]", PAPER["peak_eff_0v5_topsw"] / PAPER["soa_binary_10nm_topsw"], 1.67),
-        ("energy_vs_[9]_13.86uJ", PAPER["soa_cifar_energy_uj"][0] / (c05.energy_j * 1e6), 13.86 / 2.72),
-        ("energy_vs_[8]_3.2uJ", PAPER["soa_cifar_energy_uj"][1] / (c05.energy_j * 1e6), 3.2 / 2.72),
+        ("energy_vs_[9]_13.86uJ", PAPER["soa_cifar_energy_uj"][0] / r05.energy_uj, 13.86 / 2.72),
+        ("energy_vs_[8]_3.2uJ", PAPER["soa_cifar_energy_uj"][1] / r05.energy_uj, 3.2 / 2.72),
         ("calib_cycle_overhead", cal.cycle_overhead, None),
         ("calib_energy_overhead", cal.energy_overhead, None),
     ]
@@ -53,28 +54,24 @@ def table1():
 def fig5(steps: int = 9):
     """Voltage sweep rows: (net, V, uJ/inf, inf/s) — calibrated model."""
     out = []
-    cifar = cifar10_9layer_layers()
-    r05 = evaluate_network("cifar10", cifar, HW, 0.5)
-    cal_c = calibrate(r05, PAPER["cifar_inf_per_s"], PAPER["cifar_energy_uj"])
-    for r in voltage_sweep(cifar, HW, "cifar10", steps=steps):
-        rc = apply_calibration(r, cal_c)
-        out.append(("cifar10", round(r.v, 3), rc.energy_j * 1e6, rc.inf_per_s))
-    dvs = dvs_cnn_tcn_layers()
-    rd05 = evaluate_network("dvs", dvs, HW, 0.5)
-    # paper counts CNN passes as 'inferences' (TCN memory amortizes steps);
-    # one classification = 5 CNN passes + TCN head
-    cal_d = calibrate(rd05, PAPER["dvs_inf_per_s"] / 5.0, PAPER["dvs_energy_uj"])
-    for r in voltage_sweep(dvs, HW, "dvs", steps=steps):
-        rc = apply_calibration(r, cal_d)
-        out.append(("dvs", round(r.v, 3), rc.energy_j * 1e6, rc.inf_per_s * 5.0))
+    for graph, label, per_class in ((CIFAR_GRAPH, "cifar10", 1.0), (DVS_GRAPH, "dvs", 5.0)):
+        layers = export_conv_layers(graph)
+        r05 = evaluate_network(label, layers, HW, 0.5)
+        # the paper counts CNN passes as 'inferences' for DVS (the TCN
+        # memory amortizes the window); graph.paper_inf_per_s already holds
+        # the per-classification target
+        cal = calibrate(r05, graph.paper_inf_per_s, graph.paper_energy_uj)
+        for r in voltage_sweep(layers, HW, label, steps=steps):
+            rc = apply_calibration(r, cal)
+            out.append((label, round(r.v, 3), rc.energy_j * 1e6, rc.inf_per_s * per_class))
     return out
 
 
 def fig6(steps: int = 9):
     """(V, peak TOp/s/W, peak TOp/s) for the CIFAR first-layer burst."""
     out = []
-    cifar = cifar10_9layer_layers()
-    for r in voltage_sweep(cifar, HW, "cifar10", steps=steps):
+    layers = export_conv_layers(CIFAR_GRAPH)
+    for r in voltage_sweep(layers, HW, "cifar10", steps=steps):
         out.append((round(r.v, 3), r.peak_layer_eff_topsw_paper, r.peak_tput_tops_paper))
     return out
 
@@ -82,11 +79,8 @@ def fig6(steps: int = 9):
 def dvs_tcn_soa_comparison():
     """§8 comparisons: energy/op vs the TCN KWS accelerator [10] and the
     energy ratios vs TrueNorth [2] / Loihi [11]."""
-    dvs = dvs_cnn_tcn_layers()
-    r = evaluate_network("dvs", dvs, HW, 0.5)
-    cal = calibrate(r, PAPER["dvs_inf_per_s"] / 5.0, PAPER["dvs_energy_uj"])
-    rc = apply_calibration(r, cal)
-    ours_topsw = rc.eff_topsw_paper
+    rep = silicon_report(DVS_GRAPH, v=0.5, hw=HW)
+    ours_topsw = rep.eff_topsw
     kws_lo, kws_hi = PAPER["soa_tcn_kws_topsw"]
     return [
         ("dvs_avg_eff_TOp/s/W", ours_topsw, None),

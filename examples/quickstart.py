@@ -1,10 +1,12 @@
 """Quickstart: the paper's technique in five minutes.
 
+0. The 5-line `CutieProgram` pipeline: one network definition -> QAT
+   forward, packed 2-bit deployment, and the paper's silicon cost report.
 1. Ternary-quantize a weight matrix, pack it to 2 bits, matmul through the
    Pallas kernel — bit-exact vs the dense oracle, 8x fewer weight bytes.
 2. Map a dilated 1-D TCN convolution onto the undilated 2-D conv engine
    (the paper's §4 scheduling trick) and verify exact equivalence.
-3. Run the CUTIE silicon model and print the paper's headline numbers.
+3. Close the loop: deployed.silicon_report() vs the paper's Table 1.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,21 +14,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import get_net
 from repro.core.tcn import dilated1d_via_2d, dilated_causal_conv1d
-from repro.core.ternary import pack_ternary, ternary_quantize_weights
-from repro.core.cutie_arch import (
-    PAPER, CutieHW, apply_calibration, calibrate, cifar10_9layer_layers,
-    evaluate_network,
-)
+from repro.core.cutie_arch import PAPER
 from repro.kernels import quantize_pack_matmul_weights, ternary_matmul
 from repro.kernels.ref import ternary_matmul_ref
 
+print("=== 0. CutieProgram: one definition, every execution mode ===")
+prog = get_net("cifar10_tnn")
+params = prog.init(jax.random.PRNGKey(0))
+x = jnp.sign(jax.random.normal(jax.random.PRNGKey(1), (8, 32, 32, 3)))
+deployed = prog.quantize(params, calib=x)
+logits = deployed.forward(x, backend="pallas")
+print(f"  {prog.graph.name}: QAT params -> packed 2-bit deploy -> logits "
+      f"{tuple(logits.shape)}; backends agree: "
+      f"{bool(jnp.allclose(logits, deployed.forward(x, backend='ref'), atol=1e-4))}")
+
 print("=== 1. packed-ternary matmul (CUTIE's arithmetic on TPU) ===")
 w = jax.random.normal(jax.random.PRNGKey(0), (2048, 512))
-x = jax.random.normal(jax.random.PRNGKey(1), (64, 2048))
+xm = jax.random.normal(jax.random.PRNGKey(1), (64, 2048))
 w_packed, scale = quantize_pack_matmul_weights(w)
-y = ternary_matmul(x, w_packed, scale)
-y_ref = ternary_matmul_ref(x, w_packed, scale)
+y = ternary_matmul(xm, w_packed, scale)
+y_ref = ternary_matmul_ref(xm, w_packed, scale)
 np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=1e-4, atol=1e-4)
 dense_bytes, packed_bytes = w.size * 2, w_packed.size
 print(f"  kernel == oracle; weight bytes {dense_bytes} -> {packed_bytes} "
@@ -41,12 +50,10 @@ for d in (1, 2, 4, 8):
     np.testing.assert_allclose(np.asarray(mapped), np.asarray(ref), rtol=1e-4, atol=1e-4)
 print("  mapping exact for dilations 1,2,4,8 — TCNs run on the 2-D engine")
 
-print("=== 3. CUTIE silicon model vs paper ===")
-hw = CutieHW()
-r = evaluate_network("cifar10", cifar10_9layer_layers(), hw, 0.5)
-cal = calibrate(r, PAPER["cifar_inf_per_s"], PAPER["cifar_energy_uj"])
-rc = apply_calibration(r, cal)
-print(f"  peak efficiency  : {r.peak_layer_eff_topsw_paper:7.0f} TOp/s/W (paper {PAPER['peak_eff_0v5_topsw']:.0f})")
-print(f"  CIFAR-10 energy  : {rc.energy_j*1e6:7.2f} uJ/inf  (paper {PAPER['cifar_energy_uj']})")
-print(f"  CIFAR-10 rate    : {rc.inf_per_s:7.0f} inf/s   (paper {PAPER['cifar_inf_per_s']:.0f})")
+print("=== 3. CUTIE silicon model vs paper (deployed.silicon_report) ===")
+rep = deployed.silicon_report(v=0.5)
+print(f"  peak efficiency  : {rep.peak_eff_topsw:7.0f} TOp/s/W (paper {PAPER['peak_eff_0v5_topsw']:.0f})")
+print(f"  CIFAR-10 energy  : {rep.energy_uj:7.2f} uJ/inf  (paper {PAPER['cifar_energy_uj']})")
+print(f"  CIFAR-10 rate    : {rep.inf_per_s:7.0f} inf/s   (paper {PAPER['cifar_inf_per_s']:.0f})")
+print(f"  calibration consistent: {rep.calibration.consistent}")
 print("quickstart OK")

@@ -3,7 +3,8 @@
 Event frames stream through the ternary 2-D CNN into the 24-step TCN ring
 memory (the 576-byte silicon SCM); the dilated TCN head classifies after
 every frame via the §4 mapped 2-D convolutions — one inference per frame,
-past frames never recomputed.  Batched requests model multiple sensors.
+past frames never recomputed.  The whole flow is the `repro.api` program
+pipeline: registry -> CutieProgram -> quantize -> StreamSession.
 
     PYTHONPATH=src python examples/serve_dvs_stream.py [--batch 4] [--frames 10]
 """
@@ -14,42 +15,43 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import get_net
 from repro.data.pipeline import DVSEventPipeline
-from repro.models.cutie_net import (
-    DVS_CNN_TCN, init_cutie_params, make_stream, quantize_for_deploy, stream_step,
-)
-from repro.core.cutie_arch import CutieHW, dvs_cnn_layers, dvs_tcn_layers, evaluate_network
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--batch", type=int, default=4)
 ap.add_argument("--frames", type=int, default=10)
+ap.add_argument("--backend", default="pallas", choices=["pallas", "ref", "interpret"])
 ap.add_argument("--seed", type=int, default=0)
 args = ap.parse_args()
 
-print(f"[dvs] init ternary CNN-TCN ({DVS_CNN_TCN.channels} ch, "
-      f"{DVS_CNN_TCN.tcn_steps}-step TCN memory)")
-params = init_cutie_params(jax.random.PRNGKey(args.seed), DVS_CNN_TCN)
-dep = quantize_for_deploy(params, DVS_CNN_TCN)
+prog = get_net("dvs_cnn_tcn")
+g = prog.graph
+print(f"[dvs] init ternary CNN-TCN ({g.feature_channels} ch, "
+      f"{g.tcn_steps}-step TCN memory)")
+params = prog.init(jax.random.PRNGKey(args.seed))
 
 pipe = DVSEventPipeline(args.batch, steps=args.frames, seed=args.seed)
 frames, labels = pipe.next_batch()
 density = float(jnp.mean(frames))
 print(f"[dvs] {args.batch} sensors x {args.frames} frames, event density {density:.3f}")
 
-stream = make_stream(DVS_CNN_TCN, batch=args.batch)
-jit_step = jax.jit(lambda s, f: stream_step(dep, DVS_CNN_TCN, s, f))
-logits, stream = jit_step(stream, frames[:, 0])  # compile
+deployed = prog.quantize(params, calib=frames)
+session = deployed.stream(batch=args.batch, backend=args.backend)
+logits = session.step(frames[:, 0])  # compile
 t0 = time.time()
 for t in range(1, args.frames):
-    logits, stream = jit_step(stream, frames[:, t])
+    logits = session.step(frames[:, t])
 jax.block_until_ready(logits)
 dt = (time.time() - t0) / max(args.frames - 1, 1)
 pred = np.asarray(jnp.argmax(logits, -1))
-print(f"[dvs] {dt*1e3:.1f} ms/frame on CPU; predictions {pred} (untrained weights)")
+print(f"[dvs] {dt*1e3:.1f} ms/frame ({args.backend}); predictions {pred} "
+      f"(untrained weights)")
 
 # what the silicon would do with this workload:
-hw = CutieHW()
-r = evaluate_network("dvs-pass", dvs_cnn_layers() + dvs_tcn_layers(), hw, 0.5)
-print(f"[dvs] CUTIE @0.5V model: {r.inf_per_s:.0f} frames/s, "
-      f"{r.energy_j*1e6:.2f} uJ/frame (ideal schedule)")
+rep = deployed.silicon_report(v=0.5)
+print(f"[dvs] CUTIE @0.5V: {rep.energy_uj:.2f} uJ/classification "
+      f"({g.passes_per_inference} CNN passes + TCN head), "
+      f"{rep.inf_per_s * g.passes_per_inference:.0f} frames/s, "
+      f"calibration consistent: {rep.calibration.consistent}")
 print("serve_dvs_stream OK")

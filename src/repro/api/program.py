@@ -1,0 +1,535 @@
+"""`CutieProgram` — one network definition, every execution mode.
+
+Compile a declarative `CutieGraph` into an object with the full lifecycle
+the paper's silicon implements:
+
+    prog     = get_net("cifar10_tnn")          # repro.api.registry
+    params   = prog.init(jax.random.PRNGKey(0))
+    logits   = prog.forward_qat(params, x)      # STE fake-quant training path
+    deployed = prog.quantize(params, calib=x)   # packed 2-bit weights
+    logits   = deployed.forward(x, backend="pallas")   # | "ref" | "interpret"
+    session  = deployed.stream(batch=4)         # TCN ring memory (temporal)
+    report   = deployed.silicon_report(v=0.5)   # cycles/energy vs Table 1
+
+Execution semantics per layer kind are identical across paths; the QAT path
+uses STE fake-quant + per-channel batch-norm scaling, the deploy path runs
+the packed 2-bit weights through the Pallas kernels with the BN statistics
+folded into the per-OCU scale (``calib``) or a fan-in normalization fallback.
+With ``calib`` given AND the graph's ``qat_per_channel=True`` (so both paths
+share one quantization grid), forward_qat and deployed.forward agree to
+float round-off on the calibration distribution; on the default per-layer
+QAT grid the grids differ slightly and agreement is approximate — both
+tested in tests/test_api.py.
+
+Backends:
+    pallas     Pallas TPU kernels (auto-interpret on CPU) — the deploy target
+    interpret  Pallas kernels, interpreter forced — debugging on any host
+    ref        pure-jnp oracles from kernels/ref.py — the semantics anchor
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.api import quantize as q
+from repro.api.graph import CutieGraph, LayerSpec
+from repro.core import cutie_arch as arch
+from repro.core.tcn import (
+    TCNStream,
+    conv2d_undilated,
+    project_weights_to_2d,
+    unwrap_time_axis,
+    wrap_time_axis,
+)
+from repro.core.ternary import ste_ternary_acts, ste_ternary_weights
+from repro.kernels.ops import ternary_conv2d
+from repro.kernels.ref import ternary_conv2d_ref
+
+BACKENDS = ("pallas", "ref", "interpret")
+_BN_EPS = 1e-6
+
+
+def _pool(x: jax.Array, window: int) -> jax.Array:
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max,
+        (1, window, window, 1), (1, window, window, 1), "VALID",
+    )
+
+
+def _bn_sd(y: jax.Array) -> jax.Array:
+    """Per-output-channel std — the scale-only BN the silicon folds into its
+    two threshold comparators per OCU."""
+    return jnp.std(y.astype(jnp.float32), axis=tuple(range(y.ndim - 1)))
+
+
+def _ternarize(y: jax.Array, threshold: float) -> jax.Array:
+    return jnp.where(jnp.abs(y) > threshold, jnp.sign(y), 0.0)
+
+
+def _dispatch_conv(x, packed, eff_scale, backend: str):
+    """One SAME ternary conv through the selected backend.  ``x`` must
+    already be channel-padded to 4 * packed.shape[2]."""
+    if backend == "ref":
+        return ternary_conv2d_ref(x, packed, eff_scale)
+    if backend == "interpret":
+        return ternary_conv2d(x, packed, eff_scale, interpret=True)
+    if backend == "pallas":
+        return ternary_conv2d(x, packed, eff_scale)
+    raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+
+
+def _pad_channels(x: jax.Array, c: int) -> jax.Array:
+    if x.shape[-1] < c:
+        x = jnp.pad(x, ((0, 0),) * (x.ndim - 1) + ((0, c - x.shape[-1]),))
+    return x
+
+
+def _ring_window(feats: jax.Array, tcn_steps: int) -> jax.Array:
+    """[B, T, C] -> the [B, tcn_steps, C] window the ring memory would hold:
+    the newest tcn_steps entries, left-padded with zero history."""
+    b, t = feats.shape[:2]
+    if t > tcn_steps:
+        return feats[:, -tcn_steps:]
+    if t < tcn_steps:
+        pad = jnp.zeros((b, tcn_steps - t, feats.shape[-1]), feats.dtype)
+        return jnp.concatenate([pad, feats], axis=1)
+    return feats
+
+
+class CutieProgram:
+    """A compiled (validated) graph: init + QAT forward + quantization."""
+
+    def __init__(self, graph: CutieGraph):
+        self.graph = graph.validate()
+
+    # -- parameters --------------------------------------------------------
+
+    def init(self, key: jax.Array) -> Dict:
+        """Kaiming-style float params, grouped by kind:
+        {"conv": [{"w"}...], "tcn": [{"w"}...], "fc": {"w"}} (keys only for
+        kinds the graph contains — layout shared with the legacy model)."""
+        g = self.graph
+        convs = [l for l in g.layers if l.kind == "conv2d"]
+        tcns = [l for l in g.layers if l.kind == "tcn"]
+        fcs = [l for l in g.layers if l.kind == "fc"]
+        # key schedule kept bit-compatible with the legacy init for the two
+        # paper networks (<=8 conv, <=7 tcn layers)
+        if len(convs) <= 8 and len(tcns) <= 7:
+            ks = jax.random.split(key, 16)
+            k_conv = lambda i: ks[i]
+            k_tcn = lambda i: ks[8 + i]
+            k_fc = ks[-1]
+        else:
+            ks = jax.random.split(key, len(convs) + len(tcns) + 1)
+            k_conv = lambda i: ks[i]
+            k_tcn = lambda i: ks[len(convs) + i]
+            k_fc = ks[-1]
+        p: Dict = {}
+        if convs:
+            p["conv"] = [
+                {"w": jax.random.normal(k_conv(i), (*l.kernel, l.c_in, l.c_out))
+                      * (2.0 / (l.kernel[0] * l.kernel[1] * l.c_in)) ** 0.5}
+                for i, l in enumerate(convs)
+            ]
+        if tcns:
+            p["tcn"] = [
+                {"w": jax.random.normal(k_tcn(i), (l.taps, l.c_in, l.c_out))
+                      * (2.0 / (l.taps * l.c_in)) ** 0.5}
+                for i, l in enumerate(tcns)
+            ]
+        if fcs:
+            (l,) = fcs
+            p["fc"] = {"w": jax.random.normal(k_fc, (l.c_in, l.c_out)) * 0.05}
+        return p
+
+    # -- QAT interpreter ---------------------------------------------------
+
+    def spatial_forward_qat(
+        self, params: Dict, x: jax.Array, _record: Optional[List] = None
+    ) -> jax.Array:
+        """The 2-D frontend on [B, H, W, C_in] — per frame for temporal
+        graphs, the whole net (including fc) for spatial ones."""
+        g = self.graph
+        ci = 0
+        for l in g.spatial_layers:
+            if l.kind == "conv2d":
+                axis = (0, 1, 2) if g.qat_per_channel else None
+                wq = ste_ternary_weights(params["conv"][ci]["w"], g.weight_nu, axis)
+                ci += 1
+                y = jax.lax.conv_general_dilated(
+                    x, wq, (1, 1), "SAME",
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                )
+                sd = _bn_sd(y)
+                if _record is not None:
+                    _record.append(sd)
+                x = ste_ternary_acts(y / (sd + _BN_EPS), g.act_threshold)
+            elif l.kind == "pool":
+                x = _pool(x, l.window)
+            elif l.kind == "global_pool":
+                x = x.mean(axis=(1, 2))
+            elif l.kind == "flatten":
+                x = x.reshape(x.shape[0], -1)
+            elif l.kind == "fc":
+                x = x @ ste_ternary_weights(params["fc"]["w"], g.weight_nu,
+                                            0 if g.qat_per_channel else None)
+        return x
+
+    def temporal_forward_qat(
+        self, params: Dict, feats: jax.Array, _record: Optional[List] = None
+    ) -> jax.Array:
+        """TCN head + classifier over the ordered window [B, T, C].  Every
+        dilated layer runs through the §4 wrap -> undilated-2-D-conv ->
+        unwrap mapping — the exact schedule the silicon executes."""
+        g = self.graph
+        x = feats
+        ti = 0
+        for l in g.temporal_layers:
+            if l.kind == "tcn":
+                axis = (0, 1) if g.qat_per_channel else None
+                wq = ste_ternary_weights(params["tcn"][ti]["w"], g.weight_nu, axis)
+                ti += 1
+                z = wrap_time_axis(x, l.dilation)
+                y2 = conv2d_undilated(z, project_weights_to_2d(wq, kh=l.kernel[0], kw=l.kernel[1]))
+                y = unwrap_time_axis(y2, x.shape[1])
+                sd = _bn_sd(y)
+                if _record is not None:
+                    _record.append(sd)
+                x = ste_ternary_acts(y / (sd + _BN_EPS), g.act_threshold)
+            elif l.kind == "last_step":
+                x = x[:, -1, :]
+            elif l.kind == "fc":
+                x = x @ ste_ternary_weights(params["fc"]["w"], g.weight_nu,
+                                            0 if g.qat_per_channel else None)
+        return x
+
+    def forward_qat(self, params: Dict, x: jax.Array) -> jax.Array:
+        """Spatial graphs: [B, H, W, C] -> logits.  Temporal graphs:
+        frames [B, T, H, W, C] -> logits over exactly what the ring memory
+        would hold: the last tcn_steps frames, zero-padded on the left when
+        the clip is shorter."""
+        g = self.graph
+        if not g.is_temporal:
+            return self.spatial_forward_qat(params, x)
+        feats = jax.vmap(
+            lambda f: self.spatial_forward_qat(params, f), in_axes=1, out_axes=1
+        )(x)
+        return self.temporal_forward_qat(params, _ring_window(feats, g.tcn_steps))
+
+    # -- quantization ------------------------------------------------------
+
+    def quantize(self, params: Dict, calib: Optional[jax.Array] = None) -> "DeployedProgram":
+        """QAT params -> packed 2-bit deploy tables (one quantize->pad->pack
+        path for every layer kind: repro.api.quantize).
+
+        ``calib``: an example input batch.  When given, the QAT forward runs
+        once recording each layer's BN std, which deployment folds into the
+        per-OCU scale — the silicon's offline BN/threshold folding.  Without
+        it, a 1/sqrt(fan-in) normalization keeps accumulations in range.
+        """
+        g = self.graph
+        tables: Dict = {"conv": [], "tcn": [], "fc": {}}
+        for lp in params.get("conv", []):
+            packed, scale = q.quantize_pack_conv_weights(lp["w"], nu=g.weight_nu)
+            tables["conv"].append({"packed": packed, "scale": scale})
+        tcn_specs = [l for l in g.layers if l.kind == "tcn"]
+        for lp, l in zip(params.get("tcn", []), tcn_specs):
+            packed, scale = q.quantize_pack_tcn_weights(
+                lp["w"], nu=g.weight_nu, kh=l.kernel[0], kw=l.kernel[1]
+            )
+            tables["tcn"].append({"packed": packed, "scale": scale, "dilation": l.dilation})
+        if "fc" in params:
+            t, a = q.ternary_quantize_weights(params["fc"]["w"], nu=g.weight_nu, axis=0)
+            tables["fc"] = {"t": t, "scale": a.reshape(-1)}
+        if calib is not None:
+            spatial_rec: List = []
+            temporal_rec: List = []
+            if g.is_temporal:
+                # pooled statistics over all frames, then over the window
+                frames = calib.reshape(-1, *calib.shape[2:])
+                feats = self.spatial_forward_qat(params, frames, _record=spatial_rec)
+                window = feats.reshape(calib.shape[0], calib.shape[1], -1)
+                self.temporal_forward_qat(
+                    params, _ring_window(window, g.tcn_steps), _record=temporal_rec
+                )
+            else:
+                self.spatial_forward_qat(params, calib, _record=spatial_rec)
+            for entry, sd in zip(tables["conv"], spatial_rec):
+                entry["bn_sd"] = sd
+            for entry, sd in zip(tables["tcn"], temporal_rec):
+                entry["bn_sd"] = sd
+        return DeployedProgram(g, tables)
+
+    # -- silicon model -----------------------------------------------------
+
+    def silicon_report(self, v: float = 0.5, hw: Optional[arch.CutieHW] = None) -> "SiliconReport":
+        return silicon_report(self.graph, v=v, hw=hw)
+
+
+@dataclasses.dataclass
+class DeployedProgram:
+    """Packed 2-bit weights + the deploy interpreter over them.
+
+    ``tables`` layout (shared with the legacy ``quantize_for_deploy``):
+      conv: [{"packed", "scale", ("bn_sd")} ...]   packed along C_in
+      tcn:  [{"packed", "scale", "dilation", ("bn_sd")} ...]  §4-projected 2-D
+      fc:   {"t", "scale"}                          dense int8 trits
+    """
+
+    graph: CutieGraph
+    tables: Dict
+
+    # -- per-layer-kind execution -----------------------------------------
+
+    @staticmethod
+    def _check_backend(backend: str) -> None:
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+
+    def _eff_scale(self, entry: Dict, fan_in: int) -> jax.Array:
+        if "bn_sd" in entry:
+            return entry["scale"] / (entry["bn_sd"] + _BN_EPS)
+        return entry["scale"] / jnp.sqrt(float(fan_in))
+
+    def spatial_forward(self, x: jax.Array, backend: str = "pallas") -> jax.Array:
+        """Frontend (or whole spatial net) on packed weights: [B,H,W,C] ->
+        feature vector / logits."""
+        g = self.graph
+        ci = 0
+        for l in g.spatial_layers:
+            if l.kind == "conv2d":
+                entry = self.tables["conv"][ci]
+                ci += 1
+                c_pad = 4 * entry["packed"].shape[2]
+                x = _pad_channels(x, c_pad)
+                eff = self._eff_scale(entry, l.kernel[0] * l.kernel[1] * c_pad)
+                y = _dispatch_conv(x, entry["packed"], eff, backend)
+                x = _ternarize(y, g.act_threshold)
+            elif l.kind == "pool":
+                x = _pool(x, l.window)
+            elif l.kind == "global_pool":
+                x = x.mean(axis=(1, 2))
+            elif l.kind == "flatten":
+                x = x.reshape(x.shape[0], -1)
+            elif l.kind == "fc":
+                fc = self.tables["fc"]
+                x = x @ (fc["t"].astype(x.dtype) * fc["scale"])
+        return x
+
+    def temporal_forward(self, feats: jax.Array, backend: str = "pallas") -> jax.Array:
+        """TCN head over the ordered window [B, T, C] -> logits, via the §4
+        mapping + the 2-D conv kernel (SAME pad adjusted to causal)."""
+        g = self.graph
+        x = feats
+        for entry, l in zip(self.tables["tcn"], (l for l in g.temporal_layers if l.kind == "tcn")):
+            z = wrap_time_axis(x, entry["dilation"])
+            # the kernel runs SAME (top pad (kh-1)//2); add the rest of the
+            # causal (kh-1) pad so it matches conv2d_undilated's schedule
+            kh = l.kernel[0]
+            zp = jnp.pad(z, ((0, 0), ((kh - 1) - (kh - 1) // 2, 0), (0, 0), (0, 0)))
+            eff = self._eff_scale(entry, l.taps * x.shape[-1])
+            y2 = _dispatch_conv(zp, entry["packed"], eff, backend)[:, : z.shape[1]]
+            y = unwrap_time_axis(y2, x.shape[1])
+            x = _ternarize(y, g.act_threshold)
+        for l in g.temporal_layers:
+            if l.kind == "last_step":
+                x = x[:, -1, :]
+            elif l.kind == "fc":
+                fc = self.tables["fc"]
+                x = x @ (fc["t"].astype(x.dtype) * fc["scale"])
+        return x
+
+    def forward(self, x: jax.Array, backend: str = "pallas") -> jax.Array:
+        """Whole-network deploy inference.  Spatial graphs: [B,H,W,C] ->
+        logits.  Temporal graphs: frames [B,T,H,W,C] -> logits over the
+        ring window (last tcn_steps frames, zero history on the left) —
+        bit-identical to streaming the frames through ``stream()`` (tested,
+        including clips longer than the ring)."""
+        self._check_backend(backend)
+        g = self.graph
+        if not g.is_temporal:
+            return self.spatial_forward(x, backend)
+        feats = jax.vmap(
+            lambda f: self.spatial_forward(f, backend), in_axes=1, out_axes=1
+        )(x)
+        return self.temporal_forward(_ring_window(feats, g.tcn_steps), backend)
+
+    # -- streaming (the silicon's autonomous mode) ------------------------
+
+    def stream_step(
+        self, stream: TCNStream, frame: jax.Array, backend: str = "pallas"
+    ) -> Tuple[jax.Array, TCNStream]:
+        """Pure-functional step: one sensor frame -> (logits, new stream).
+        CNN frontend -> push feature vector into the ring -> TCN head over
+        the ordered window; past frames are never recomputed."""
+        self._check_backend(backend)
+        feat = self.spatial_forward(frame, backend)
+        stream = stream.push(feat)
+        window = stream.ordered()
+        if window.ndim == 2:
+            window = window[None]
+        return self.temporal_forward(window, backend), stream
+
+    def stream(
+        self, batch: Optional[int] = None, backend: str = "pallas", jit: bool = True
+    ) -> "StreamSession":
+        if not self.graph.is_temporal:
+            raise ValueError(f"{self.graph.name} has no TCN memory to stream into")
+        return StreamSession(self, batch=batch, backend=backend, jit=jit)
+
+    # -- silicon model -----------------------------------------------------
+
+    def silicon_report(self, v: float = 0.5, hw: Optional[arch.CutieHW] = None) -> "SiliconReport":
+        return silicon_report(self.graph, v=v, hw=hw)
+
+
+class StreamSession:
+    """Stateful wrapper over the TCN ring memory (24 x C x 2 bit SCM).
+
+    ``step(frame)`` returns the per-frame logits and advances the ring —
+    the serving-facing analogue of `DeployedProgram.stream_step`, with the
+    step function jitted once per session.
+    """
+
+    def __init__(self, deployed: DeployedProgram, batch: Optional[int] = None,
+                 backend: str = "pallas", jit: bool = True):
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}")
+        self.deployed = deployed
+        self.backend = backend
+        self.batch = batch
+        g = deployed.graph
+        self.state = TCNStream.create(g.tcn_steps, g.feature_channels, batch=batch)
+        self.steps_seen = 0  # monotonic; the ring cursor wraps mod tcn_steps
+        fn = lambda s, f: deployed.stream_step(s, f, backend)
+        self._step = jax.jit(fn) if jit else fn
+
+    @property
+    def window_warm(self) -> bool:
+        """True once the full tcn_steps window holds real (non-pad) frames."""
+        return self.steps_seen >= self.deployed.graph.tcn_steps
+
+    def step(self, frame: jax.Array) -> jax.Array:
+        logits, self.state = self._step(self.state, frame)
+        self.steps_seen += 1
+        return logits
+
+    def reset(self) -> None:
+        g = self.deployed.graph
+        self.state = TCNStream.create(g.tcn_steps, g.feature_channels, batch=self.batch)
+        self.steps_seen = 0
+
+
+# ---------------------------------------------------------------------------
+# Graph -> analytical silicon model (core.cutie_arch)
+# ---------------------------------------------------------------------------
+
+def export_conv_layers(graph: CutieGraph, repeat_frontend: Optional[int] = None) -> List[arch.ConvLayer]:
+    """Lower the graph to the cycle-accurate layer list of the silicon model.
+
+    Temporal graphs count ``passes_per_inference`` frontend passes per
+    classification (the TCN memory makes the remaining window steps free);
+    TCN layers appear in their §4 mapped 2-D form [ceil(T/D), D].
+    """
+    g = graph
+    h, w = g.input_hw
+    flat_hw: Optional[Tuple[int, int]] = None
+    c_now = g.input_ch
+    frontend: List[arch.ConvLayer] = []
+    head: List[arch.ConvLayer] = []
+    for l in g.layers:
+        if l.kind == "conv2d":
+            frontend.append(arch.ConvLayer(h, w, l.c_in, l.c_out, kh=l.kernel[0], kw=l.kernel[1]))
+            c_now = l.c_out
+        elif l.kind == "pool":
+            h, w = h // l.window, w // l.window
+        elif l.kind == "global_pool":
+            h = w = 1
+        elif l.kind == "flatten":
+            flat_hw = (h, w)
+            h = w = 1
+        elif l.kind == "tcn":
+            head.append(arch.ConvLayer(-(-g.tcn_steps // l.dilation), l.dilation, l.c_in, l.c_out))
+            c_now = l.c_out
+        elif l.kind == "fc":
+            kh, kw = flat_hw if flat_hw is not None else (1, 1)
+            head.append(arch.ConvLayer(1, 1, c_now, l.c_out, kh=kh, kw=kw, is_fc=True))
+    passes = repeat_frontend if repeat_frontend is not None else (
+        g.passes_per_inference if g.is_temporal else 1
+    )
+    return frontend * passes + head
+
+
+@dataclasses.dataclass
+class SiliconReport:
+    """The closed loop: graph -> cycles/energy -> paper's measured corner.
+
+    ``ideal`` is the pixel-per-cycle schedule; ``calibrated`` projects it
+    onto the measured silicon through the published (inf/s, uJ) corner, and
+    ``calibration.consistent`` is the model's validity check (cycle and
+    energy overheads must agree — they do for both paper networks)."""
+
+    graph_name: str
+    v: float
+    ideal: arch.NetReport
+    calibration: Optional[arch.Calibration]
+    calibrated: Optional[arch.NetReport]
+
+    @property
+    def report(self) -> arch.NetReport:
+        return self.calibrated if self.calibrated is not None else self.ideal
+
+    @property
+    def energy_uj(self) -> float:
+        return self.report.energy_j * 1e6
+
+    @property
+    def inf_per_s(self) -> float:
+        return self.report.inf_per_s
+
+    @property
+    def eff_topsw(self) -> float:
+        return self.report.eff_topsw_paper
+
+    @property
+    def peak_eff_topsw(self) -> float:
+        return self.ideal.peak_layer_eff_topsw_paper
+
+    def summary(self) -> str:
+        lines = [
+            f"[{self.graph_name} @ {self.v:.2f} V]",
+            f"  peak efficiency : {self.peak_eff_topsw:8.0f} TOp/s/W",
+            f"  energy/inference: {self.energy_uj:8.2f} uJ"
+            + ("" if self.calibrated is not None else " (ideal schedule)"),
+            f"  inference rate  : {self.inf_per_s:8.0f} inf/s",
+            f"  avg efficiency  : {self.eff_topsw:8.1f} TOp/s/W",
+        ]
+        if self.calibration is not None:
+            lines.append(
+                f"  calibration     : cycle x{self.calibration.cycle_overhead:.2f}, "
+                f"energy x{self.calibration.energy_overhead:.2f}, "
+                f"consistent={self.calibration.consistent}"
+            )
+        return "\n".join(lines)
+
+
+def silicon_report(
+    graph: CutieGraph, v: float = 0.5, hw: Optional[arch.CutieHW] = None
+) -> SiliconReport:
+    """Evaluate the analytical CUTIE model on this graph and, when the graph
+    carries a published corner, calibrate against it (at the paper's 0.5 V
+    measurement point, as the paper does)."""
+    hw = hw or arch.CutieHW()
+    layers = export_conv_layers(graph)
+    ideal = arch.evaluate_network(graph.name, layers, hw, v)
+    cal = calibrated = None
+    if graph.paper_energy_uj is not None and graph.paper_inf_per_s is not None:
+        at_half_volt = arch.evaluate_network(graph.name, layers, hw, 0.5)
+        cal = arch.calibrate(at_half_volt, graph.paper_inf_per_s, graph.paper_energy_uj)
+        calibrated = arch.apply_calibration(ideal, cal)
+    return SiliconReport(
+        graph_name=graph.name, v=v, ideal=ideal, calibration=cal, calibrated=calibrated
+    )

@@ -1,0 +1,76 @@
+"""THE quantize -> pad -> pack path, shared by every deployment consumer.
+
+Exactly one implementation of "float weights to packed 2-bit ternary" lives
+in the repo (this file); `kernels/ops.py` re-exports the matmul/conv helpers
+and `CutieProgram.quantize` routes every layer kind through here.  The dedupe
+is tested: tests/test_api.py asserts bit-identical packed bytes between the
+kernel-facing helpers and the deploy tables.
+
+All helpers return ``(packed_uint8, scale)`` where ``unpack(packed) * scale``
+approximates the input weights (TWN: per-group threshold nu * E|w|).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tcn import project_weights_to_2d
+from repro.core.ternary import (
+    TERNARY_NU_DEFAULT,
+    pack_ternary,
+    ternary_quantize_weights,
+)
+
+
+def quantize_pad_pack(
+    w: jax.Array,
+    *,
+    reduce_axes,
+    pack_axis: int,
+    nu: float = TERNARY_NU_DEFAULT,
+) -> Tuple[jax.Array, jax.Array]:
+    """Ternary-quantize ``w`` (thresholding over ``reduce_axes``), zero-pad
+    ``pack_axis`` to a multiple of 4, and pack 4 trits/byte along it.
+
+    Zero is a valid ternary value contributing nothing to dot products, so
+    the padding is semantically free; kernels pad activations to match.
+    """
+    t, alpha = ternary_quantize_weights(w, nu=nu, axis=reduce_axes)
+    n = t.shape[pack_axis]
+    padding = [(0, 0)] * t.ndim
+    padding[pack_axis] = (0, (-n) % 4)
+    t = jnp.pad(t, padding)
+    return pack_ternary(t, axis=pack_axis), alpha.reshape(-1)
+
+
+def quantize_pack_matmul_weights(
+    w: jax.Array, nu: float = TERNARY_NU_DEFAULT
+) -> Tuple[jax.Array, jax.Array]:
+    """[K, N] float -> ([ceil(K/4), N] uint8 packed, [N] per-column scale)."""
+    return quantize_pad_pack(w, reduce_axes=0, pack_axis=0, nu=nu)
+
+
+def quantize_pack_conv_weights(
+    w: jax.Array, nu: float = TERNARY_NU_DEFAULT
+) -> Tuple[jax.Array, jax.Array]:
+    """[KH, KW, C_in, C_out] float -> packed along C_in + per-C_out scale."""
+    return quantize_pad_pack(w, reduce_axes=(0, 1, 2), pack_axis=2, nu=nu)
+
+
+def quantize_pack_tcn_weights(
+    w: jax.Array,
+    nu: float = TERNARY_NU_DEFAULT,
+    *,
+    kh: int = 3,
+    kw: int = 3,
+) -> Tuple[jax.Array, jax.Array]:
+    """1-D TCN kernel [N, C_in, C_out] -> packed 2-D kernel via the paper's
+    §4 weight projection (taps into the middle column of a KHxKW kernel),
+    then the same pad+pack as any conv weight."""
+    t, alpha = ternary_quantize_weights(w, nu=nu, axis=(0, 1))
+    k2d = project_weights_to_2d(t.astype(jnp.int8), kh=kh, kw=kw)
+    n = k2d.shape[2]
+    k2d = jnp.pad(k2d, ((0, 0), (0, 0), (0, (-n) % 4), (0, 0)))
+    return pack_ternary(k2d, axis=2), alpha.reshape(-1)

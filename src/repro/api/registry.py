@@ -1,0 +1,132 @@
+"""Network registry: name -> `CutieGraph` builder -> `CutieProgram`.
+
+New workloads are one `register_net` call; everything downstream (QAT,
+packed deploy, streaming, silicon report, serving) composes against the
+returned `CutieProgram`.  Seeded with the paper's two benchmark networks:
+
+  * ``cifar10_tnn``  — the 9-layer (8 conv + FC) 96-channel ternary CNN of
+    §7, behind the 2.72 uJ / 1036 TOp/s/W headline numbers.
+  * ``dvs_cnn_tcn``  — the hybrid 2-D-CNN + dilated-TCN of [6] (5-layer CNN
+    frontend into a 24-step TCN memory, 4 dilated TCN layers, 12-class head).
+
+Legacy aliases ``cutie_cifar10`` / ``cutie_dvs`` map to the same graphs.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Union
+
+from repro.api.graph import (
+    CutieGraph,
+    conv2d,
+    fc,
+    flatten,
+    global_pool,
+    last_step,
+    pool,
+    tcn,
+)
+from repro.api.program import CutieProgram
+from repro.core.cutie_arch import PAPER
+
+GraphBuilder = Callable[[], CutieGraph]
+
+_REGISTRY: Dict[str, GraphBuilder] = {}
+
+
+def register_net(name: str, builder: Union[CutieGraph, GraphBuilder, None] = None):
+    """Register a graph (or zero-arg builder) under ``name``.
+
+    Usable directly — ``register_net("mynet", graph)`` — or as a decorator
+    over a builder function.  Graphs are validated at registration.
+    """
+    def _register(b: GraphBuilder) -> GraphBuilder:
+        b().validate()
+        _REGISTRY[name] = b
+        return b
+
+    if builder is None:
+        return _register
+    if isinstance(builder, CutieGraph):
+        g = builder.validate()
+        _REGISTRY[name] = lambda: g
+        return _REGISTRY[name]
+    return _register(builder)
+
+
+def get_net(name: str) -> CutieProgram:
+    """Compile the registered graph into a ready-to-use `CutieProgram`."""
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown net {name!r}; registered: {sorted(_REGISTRY)}")
+    return CutieProgram(_REGISTRY[name]())
+
+
+def get_graph(name: str) -> CutieGraph:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown net {name!r}; registered: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_nets() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# The paper's two benchmark networks
+# ---------------------------------------------------------------------------
+
+def cifar10_tnn_graph(channels: int = 96, n_classes: int = 10) -> CutieGraph:
+    """VGG-like 9-layer TNN: 2x conv @32, pool, 3x conv @16, pool,
+    3x conv @8, pool, flatten, FC."""
+    c = channels
+    layers = (
+        conv2d(3, c), conv2d(c, c), pool(),
+        conv2d(c, c), conv2d(c, c), conv2d(c, c), pool(),
+        conv2d(c, c), conv2d(c, c), conv2d(c, c), pool(),
+        flatten(), fc(16 * c, n_classes),
+    )
+    return CutieGraph(
+        name="cifar10_tnn",
+        layers=layers,
+        input_hw=(32, 32),
+        input_ch=3,
+        n_classes=n_classes,
+        paper_energy_uj=PAPER["cifar_energy_uj"],
+        paper_inf_per_s=PAPER["cifar_inf_per_s"],
+    )
+
+
+def dvs_cnn_tcn_graph(channels: int = 96, n_classes: int = 12) -> CutieGraph:
+    """Hybrid gesture network of [6]: 5 conv+pool stages (64 -> 2 px),
+    global pool to a feature vector, 4 dilated TCN layers (D = 1,2,4,8)
+    through the §4 mapping, last-step FC head.  One classification = 5 CNN
+    passes through the TCN memory + the TCN head (paper's counting)."""
+    c = channels
+    layers = (
+        conv2d(2, 64), pool(),
+        conv2d(64, 64), pool(),
+        conv2d(64, 96), pool(),
+        conv2d(96, 96), pool(),
+        conv2d(96, c), pool(),
+        global_pool(),
+        tcn(c, c, dilation=1), tcn(c, c, dilation=2),
+        tcn(c, c, dilation=4), tcn(c, c, dilation=8),
+        last_step(), fc(c, n_classes),
+    )
+    return CutieGraph(
+        name="dvs_cnn_tcn",
+        layers=layers,
+        input_hw=(64, 64),
+        input_ch=2,
+        n_classes=n_classes,
+        tcn_steps=PAPER["tcn_steps"],
+        passes_per_inference=5,
+        paper_energy_uj=PAPER["dvs_energy_uj"],
+        paper_inf_per_s=PAPER["dvs_inf_per_s"] / 5.0,
+    )
+
+
+register_net("cifar10_tnn", cifar10_tnn_graph)
+register_net("dvs_cnn_tcn", dvs_cnn_tcn_graph)
+# legacy config names from configs/cutie_nets.py
+register_net("cutie_cifar10", cifar10_tnn_graph)
+register_net("cutie_dvs", dvs_cnn_tcn_graph)

@@ -1,7 +1,21 @@
-"""The paper's own networks as selectable configs (CutieNetConfig)."""
+"""The paper's own networks as selectable configs.
+
+``CUTIE_CONFIGS`` keeps the legacy `CutieNetConfig` objects; new code should
+use the graph registry instead:
+
+    from repro.api import get_net, list_nets
+    prog = get_net("cifar10_tnn")   # or "dvs_cnn_tcn"
+"""
 from repro.models.cutie_net import CIFAR_TNN, DVS_CNN_TCN
 
 CUTIE_CONFIGS = {
     "cutie_cifar10": CIFAR_TNN,
     "cutie_dvs": DVS_CNN_TCN,
 }
+
+
+def cutie_graph(name: str):
+    """Registry graph for a legacy config name (or any registered net)."""
+    from repro.api import get_graph
+
+    return get_graph(name)

@@ -71,22 +71,27 @@ def ternary_quantize_acts(x: jax.Array, *, threshold: float = 0.5) -> jax.Array:
 # Straight-through estimators (QAT)
 # ---------------------------------------------------------------------------
 
-@jax.custom_vjp
-def ste_ternary_weights(w: jax.Array, nu: float) -> jax.Array:
-    """Forward: alpha * ternary(w).  Backward: identity on w (clipped)."""
-    t, alpha = ternary_quantize_weights(w, nu=nu, axis=None)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def ste_ternary_weights(w: jax.Array, nu: float, axis=None) -> jax.Array:
+    """Forward: alpha * ternary(w).  Backward: identity on w (clipped).
+
+    ``axis`` selects the threshold/scale grouping exactly as in
+    :func:`ternary_quantize_weights`, so QAT (this function) and deployment
+    (api/quantize.py) share one quantization grid — axis=(0,1,2) on a conv
+    weight gives the per-OCU scale the silicon applies."""
+    t, alpha = ternary_quantize_weights(w, nu=nu, axis=axis)
     return alpha * t.astype(w.dtype)
 
 
-def _stw_fwd(w, nu):
-    return ste_ternary_weights(w, nu), (w,)
+def _stw_fwd(w, nu, axis):
+    return ste_ternary_weights(w, nu, axis), (w,)
 
 
-def _stw_bwd(res, g):
+def _stw_bwd(nu, axis, res, g):
     (w,) = res
     # pass-through inside [-1, 1]*max|w| band; zero outside (standard clip-STE)
     bound = jnp.maximum(jnp.max(jnp.abs(w)), 1e-6)
-    return (jnp.where(jnp.abs(w) <= bound, g, 0.0), None)
+    return (jnp.where(jnp.abs(w) <= bound, g, 0.0),)
 
 
 ste_ternary_weights.defvjp(_stw_fwd, _stw_bwd)

@@ -7,38 +7,22 @@ via the Pallas interpreter for correctness), and a quantize+pack convenience.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.ternary import pack_ternary, ternary_quantize_weights
+# The quantize->pad->pack path lives in repro.api.quantize (single
+# implementation repo-wide); re-exported here for kernel-facing callers.
+from repro.api.quantize import (  # noqa: F401
+    quantize_pack_conv_weights,
+    quantize_pack_matmul_weights,
+)
 from repro.kernels.ternary_matmul import ternary_matmul_pallas
 from repro.kernels.ternary_conv2d import ternary_conv2d_pallas
 
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
-
-
-def quantize_pack_matmul_weights(w: jax.Array, nu: float = 0.7) -> Tuple[jax.Array, jax.Array]:
-    """[K, N] float -> ([ceil(K/4), N] uint8 packed, [N] scale)."""
-    t, alpha = ternary_quantize_weights(w, nu=nu, axis=0)
-    k = t.shape[0]
-    k_pad = -(-k // 4) * 4
-    if k_pad != k:
-        t = jnp.pad(t, ((0, k_pad - k), (0, 0)))
-    return pack_ternary(t, axis=0), alpha.reshape(-1)
-
-
-def quantize_pack_conv_weights(w: jax.Array, nu: float = 0.7) -> Tuple[jax.Array, jax.Array]:
-    """[KH, KW, C_in, C_out] float -> packed along C_in + per-C_out scale."""
-    t, alpha = ternary_quantize_weights(w, nu=nu, axis=(0, 1, 2))
-    c_in = t.shape[2]
-    c_pad = -(-c_in // 4) * 4
-    if c_pad != c_in:
-        t = jnp.pad(t, ((0, 0), (0, 0), (0, c_pad - c_in), (0, 0)))
-    return pack_ternary(t, axis=2), alpha.reshape(-1)
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:

@@ -6,10 +6,12 @@ Two serving paths:
     run exactly this step function on the production mesh.
   * CUTIE DVS streaming (``--dvs``): the paper's autonomous mode — event
     frames stream through the ternary CNN into the TCN ring memory, a
-    gesture label per frame (models/cutie_net.stream_step).
+    gesture label per frame.  Runs entirely through the `repro.api`
+    program pipeline: registry net -> CutieProgram -> quantize ->
+    StreamSession, with the per-frame silicon cost reported at exit.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke --tokens 16
-    PYTHONPATH=src python -m repro.launch.serve --dvs --frames 8
+    PYTHONPATH=src python -m repro.launch.serve --dvs --frames 8 --backend pallas
 """
 from __future__ import annotations
 
@@ -70,24 +72,26 @@ def serve_lm(args):
 
 
 def serve_dvs(args):
+    from repro.api import get_net
     from repro.data.pipeline import DVSEventPipeline
-    from repro.models.cutie_net import (
-        DVS_CNN_TCN, init_cutie_params, make_stream, quantize_for_deploy, stream_step,
-    )
 
-    params = init_cutie_params(jax.random.PRNGKey(args.seed), DVS_CNN_TCN)
-    dep = quantize_for_deploy(params, DVS_CNN_TCN)
+    prog = get_net("dvs_cnn_tcn")
+    params = prog.init(jax.random.PRNGKey(args.seed))
     pipe = DVSEventPipeline(args.batch, steps=args.frames, seed=args.seed)
     frames, labels = pipe.next_batch()
-    stream = make_stream(DVS_CNN_TCN, batch=args.batch)
+    deployed = prog.quantize(params, calib=frames)
+    session = deployed.stream(batch=args.batch, backend=args.backend)
     t0 = time.time()
     for t in range(args.frames):
-        logits, stream = stream_step(dep, DVS_CNN_TCN, stream, frames[:, t])
+        logits = session.step(frames[:, t])
     jax.block_until_ready(logits)
     dt = time.time() - t0
-    print(f"[serve-dvs] {args.frames} frames x batch {args.batch}: "
-          f"{dt/args.frames*1e3:.0f} ms/frame; logits finite: "
+    print(f"[serve-dvs] {args.frames} frames x batch {args.batch} "
+          f"({args.backend}): {dt/args.frames*1e3:.0f} ms/frame; logits finite: "
           f"{bool(np.isfinite(np.asarray(logits)).all())}")
+    rep = deployed.silicon_report(v=0.5)
+    print(f"[serve-dvs] CUTIE @0.5V: {rep.energy_uj:.2f} uJ/classification, "
+          f"{rep.inf_per_s * deployed.graph.passes_per_inference:.0f} frames/s")
     return logits
 
 
@@ -98,6 +102,8 @@ def main(argv=None):
     ap.add_argument("--quant", default="none",
                     choices=["none", "ternary", "ternary_packed"])
     ap.add_argument("--dvs", action="store_true")
+    ap.add_argument("--backend", default="pallas",
+                    choices=["pallas", "ref", "interpret"])
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)

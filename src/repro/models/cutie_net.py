@@ -1,45 +1,44 @@
-"""The paper's two benchmark networks as JAX models.
+"""DEPRECATED shim — the paper's networks now live in `repro.api`.
 
-* ``cifar_tnn``: the 9-layer (8 conv + FC) 96-channel ternary CNN of §7 —
-  the network behind the 2.72 uJ / 1036 TOp/s/W headline numbers.
-* ``dvs_cnn_tcn``: the hybrid 2D-CNN + 1D-TCN of [6] (5 CNN layers feeding a
-  24-step TCN memory, 4 dilated TCN layers, 12-class DVS gesture head).
+The two benchmark networks (``cifar10_tnn``, ``dvs_cnn_tcn``) are registry
+entries compiled to `repro.api.CutieProgram`; QAT, packed deployment,
+streaming, and the silicon report are all program methods.  Use:
 
-Both support:
-  * QAT mode (STE fake-quant; what produces the 86% / 94.5% accuracies), and
-  * deploy mode (packed 2-bit weights through the Pallas kernels with fused
-    activation ternarization — the datapath the silicon runs).
+    from repro.api import get_net
+    prog     = get_net("dvs_cnn_tcn")
+    params   = prog.init(key)
+    deployed = prog.quantize(params)
+    session  = deployed.stream(batch=4)
 
-The TCN layers execute exclusively through the §4 dilated->2D mapping, i.e.
-the *same* conv engine as the CNN layers — faithful to the hardware, where
-TCN support costs <1% extra area.
+This module keeps the legacy function-per-network surface as thin wrappers
+(same signatures, same param/deploy pytree layout, same numerics) for
+existing tests and checkpoints.  New code should not import from here.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.tcn import (
-    TCNStream,
-    dilated_causal_conv1d,
-    project_weights_to_2d,
-    unwrap_time_axis,
-    wrap_time_axis,
+from repro.api.graph import (
+    CutieGraph,
+    conv2d,
+    fc,
+    flatten,
+    global_pool,
+    last_step,
+    pool,
+    tcn,
 )
-from repro.core.ternary import (
-    pack_ternary,
-    ste_ternary_acts,
-    ste_ternary_weights,
-    ternary_quantize_weights,
-)
-from repro.kernels.ops import ternary_conv2d
+from repro.api.program import CutieProgram, DeployedProgram
+from repro.core.cutie_arch import PAPER
+from repro.core.tcn import TCNStream
 
 
 @dataclasses.dataclass(frozen=True)
 class CutieNetConfig:
+    """Legacy config; `repro.api.CutieGraph` is the declarative successor."""
     name: str
     channels: int = 96
     n_classes: int = 10
@@ -60,186 +59,92 @@ DVS_CNN_TCN = CutieNetConfig(
 )
 
 
-def _conv_shapes(cfg: CutieNetConfig) -> List[Tuple[int, int]]:
-    """(c_in, c_out) for each conv layer of the 2-D frontend."""
+def _graph(cfg: CutieNetConfig) -> CutieGraph:
+    """Map the legacy config onto a CutieGraph, honoring every field —
+    the same layer construction the legacy forward functions hardcoded."""
     c = cfg.channels
-    if cfg.tcn_layers:  # DVS frontend: 5 conv layers, stride-2 pooling between
-        return [(cfg.input_ch, 64), (64, 64), (64, 96), (96, 96), (96, c)]
-    # CIFAR 9-layer: 2 @32, 3 @16, 3 @8 (pool between groups), then FC
-    return [(cfg.input_ch, c), (c, c), (c, c), (c, c), (c, c), (c, c), (c, c), (c, c)]
+    if cfg.tcn_layers:
+        # DVS frontend: 5 conv layers, stride-2 pooling between, global pool
+        shapes = [(cfg.input_ch, 64), (64, 64), (64, 96), (96, 96), (96, c)]
+        layers = []
+        for ci, co in shapes:
+            layers += [conv2d(ci, co), pool()]
+        layers.append(global_pool())
+        layers += [tcn(c, c, dilation=d, taps=cfg.tcn_taps) for d in cfg.tcn_dilations]
+        layers += [last_step(), fc(c, cfg.n_classes)]
+        paper = cfg.name == DVS_CNN_TCN.name
+        return CutieGraph(
+            name=cfg.name, layers=tuple(layers), input_hw=cfg.input_hw,
+            input_ch=cfg.input_ch, n_classes=cfg.n_classes,
+            act_threshold=cfg.act_threshold, tcn_steps=cfg.tcn_steps,
+            passes_per_inference=5,
+            paper_energy_uj=PAPER["dvs_energy_uj"] if paper else None,
+            paper_inf_per_s=PAPER["dvs_inf_per_s"] / 5.0 if paper else None,
+        )
+    # CIFAR 9-layer: 2 conv, pool, 3 conv, pool, 3 conv, pool, flatten, FC
+    h, w = cfg.input_hw
+    layers = (
+        conv2d(cfg.input_ch, c), conv2d(c, c), pool(),
+        conv2d(c, c), conv2d(c, c), conv2d(c, c), pool(),
+        conv2d(c, c), conv2d(c, c), conv2d(c, c), pool(),
+        flatten(), fc((h // 8) * (w // 8) * c, cfg.n_classes),
+    )
+    paper = cfg.name == CIFAR_TNN.name
+    return CutieGraph(
+        name=cfg.name, layers=layers, input_hw=cfg.input_hw,
+        input_ch=cfg.input_ch, n_classes=cfg.n_classes,
+        act_threshold=cfg.act_threshold,
+        paper_energy_uj=PAPER["cifar_energy_uj"] if paper else None,
+        paper_inf_per_s=PAPER["cifar_inf_per_s"] if paper else None,
+    )
+
+
+def _program(cfg: CutieNetConfig) -> CutieProgram:
+    return CutieProgram(_graph(cfg))
 
 
 def init_cutie_params(key, cfg: CutieNetConfig) -> Dict:
-    ks = jax.random.split(key, 16)
-    p: Dict = {"conv": []}
-    for i, (ci, co) in enumerate(_conv_shapes(cfg)):
-        w = jax.random.normal(ks[i], (3, 3, ci, co)) * (2.0 / (9 * ci)) ** 0.5
-        p["conv"].append({"w": w})
-    for i in range(cfg.tcn_layers):
-        ci = co = cfg.channels
-        w = jax.random.normal(ks[8 + i], (cfg.tcn_taps, ci, co)) * (2.0 / (cfg.tcn_taps * ci)) ** 0.5
-        p.setdefault("tcn", []).append({"w": w})
-    feat = cfg.channels * (16 if not cfg.tcn_layers else 1)
-    if cfg.tcn_layers:
-        p["fc"] = {"w": jax.random.normal(ks[-1], (cfg.channels, cfg.n_classes)) * 0.05}
-    else:
-        p["fc"] = {"w": jax.random.normal(ks[-1], (feat, cfg.n_classes)) * 0.05}
-    return p
-
-
-def _bn_scale(y):
-    """Scale-only batch normalization (per output channel).  The silicon
-    folds BN into the two threshold comparators per OCU ([1] §IV); a fixed
-    1/sqrt(fan) scale leaves integer accumulations far below the ternary
-    threshold at init (all-zero activations, dead network — observed)."""
-    sd = jnp.std(y.astype(jnp.float32), axis=tuple(range(y.ndim - 1)), keepdims=True)
-    return (y / (sd + 1e-6)).astype(y.dtype)
-
-
-def _tconv_qat(w, x, threshold):
-    """Ternary conv, QAT path: STE weights + STE activations."""
-    wq = ste_ternary_weights(w, 0.7)
-    y = jax.lax.conv_general_dilated(
-        x, wq, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
-    )
-    return ste_ternary_acts(_bn_scale(y), threshold)
-
-
-def _pool(x):
-    return jax.lax.reduce_window(
-        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
-    )
+    return _program(cfg).init(key)
 
 
 def cnn_forward_qat(params, cfg: CutieNetConfig, x: jax.Array) -> jax.Array:
-    """2-D frontend, QAT path.  x: [B, H, W, C_in] (float, ternarized input).
-    Returns the 1-D feature vector [B, C] (DVS) or logits (CIFAR)."""
-    th = cfg.act_threshold
-    if cfg.tcn_layers:
-        for lp in params["conv"]:
-            x = _tconv_qat(lp["w"], x, th)
-            x = _pool(x)  # 64->32->16->8->4->2
-        x = x.mean(axis=(1, 2))  # [B, C] global average -> feature vector
-        return x
-    x = _tconv_qat(params["conv"][0]["w"], x, th)
-    x = _tconv_qat(params["conv"][1]["w"], x, th)
-    x = _pool(x)
-    for lp in params["conv"][2:5]:
-        x = _tconv_qat(lp["w"], x, th)
-    x = _pool(x)
-    for lp in params["conv"][5:8]:
-        x = _tconv_qat(lp["w"], x, th)
-    x = _pool(x)  # 4x4
-    x = x.reshape(x.shape[0], -1)
-    return x @ ste_ternary_weights(params["fc"]["w"], 0.7)
+    """2-D frontend, QAT path: feature vector (DVS) or logits (CIFAR)."""
+    return _program(cfg).spatial_forward_qat(params, x)
 
 
 def tcn_forward_qat(params, cfg: CutieNetConfig, feats: jax.Array) -> jax.Array:
-    """TCN head over the time-ordered feature window [B, T, C] -> logits.
-
-    Every dilated layer runs through the §4 mapping (wrap -> undilated 2-D
-    conv -> unwrap): the mathematical identity is property-tested, and this
-    is the exact schedule the silicon executes.
-    """
-    x = feats
-    th = cfg.act_threshold
-    for lp, d in zip(params["tcn"], cfg.tcn_dilations):
-        wq = ste_ternary_weights(lp["w"], 0.7)
-        z = wrap_time_axis(x, d)
-        k2d = project_weights_to_2d(wq)
-        from repro.core.tcn import conv2d_undilated
-
-        y2 = conv2d_undilated(z, k2d)
-        y = unwrap_time_axis(y2, x.shape[1])
-        x = ste_ternary_acts(_bn_scale(y), th)
-    x = x[:, -1, :]  # last time step
-    return x @ ste_ternary_weights(params["fc"]["w"], 0.7)
+    """TCN head over the time-ordered feature window [B, T, C] -> logits."""
+    return _program(cfg).temporal_forward_qat(params, feats)
 
 
 def dvs_forward_qat(params, cfg: CutieNetConfig, frames: jax.Array) -> jax.Array:
     """Full hybrid pass: frames [B, T, H, W, C] -> logits [B, n_classes]."""
-    b, t = frames.shape[:2]
-    feats = jax.vmap(lambda f: cnn_forward_qat(params, cfg, f), in_axes=1, out_axes=1)(frames)
-    # pad the time window to tcn_steps (causal zero history), newest last
-    pad = cfg.tcn_steps - t
-    if pad > 0:
-        feats = jnp.concatenate(
-            [jnp.zeros((b, pad, feats.shape[-1]), feats.dtype), feats], axis=1
-        )
-    return tcn_forward_qat(params, cfg, feats)
+    return _program(cfg).forward_qat(params, frames)
 
 
-# ---------------------------------------------------------------------------
-# Deploy path: packed weights through the Pallas kernels
-# ---------------------------------------------------------------------------
+def quantize_for_deploy(params, cfg: CutieNetConfig, calib: Optional[jax.Array] = None) -> Dict:
+    """QAT params -> packed 2-bit deploy tables (see CutieProgram.quantize)."""
+    return _program(cfg).quantize(params, calib=calib).tables
 
-def quantize_for_deploy(params, cfg: CutieNetConfig) -> Dict:
-    """QAT params -> packed 2-bit weights (+ scales) for kernel execution."""
-    dep: Dict = {"conv": [], "tcn": [], "fc": {}}
-    for lp in params["conv"]:
-        t, a = ternary_quantize_weights(lp["w"], axis=(0, 1, 2))
-        ci = t.shape[2]
-        t = jnp.pad(t, ((0, 0), (0, 0), (0, (-ci) % 4), (0, 0)))
-        dep["conv"].append({"packed": pack_ternary(t, axis=2), "scale": a.reshape(-1)})
-    for lp, d in zip(params.get("tcn", []), cfg.tcn_dilations):
-        t, a = ternary_quantize_weights(lp["w"], axis=(0, 1))
-        k2d = project_weights_to_2d(t.astype(jnp.int8))
-        dep["tcn"].append({"packed": pack_ternary(k2d, axis=2), "scale": a.reshape(-1), "dilation": d})
-    t, a = ternary_quantize_weights(params["fc"]["w"], axis=0)
-    dep["fc"] = {"t": t, "scale": a.reshape(-1)}
-    return dep
+
+def _deployed(dep: Dict, cfg: CutieNetConfig) -> DeployedProgram:
+    return DeployedProgram(_program(cfg).graph, dep)
 
 
 def cnn_forward_deploy(dep, cfg: CutieNetConfig, x: jax.Array) -> jax.Array:
-    """DVS frontend on the Pallas conv kernel with fused ternarization."""
-    th = cfg.act_threshold
-    assert cfg.tcn_layers, "deploy path implemented for the DVS hybrid net"
-    for lp in dep["conv"]:
-        ci = 4 * lp["packed"].shape[2]
-        if x.shape[-1] < ci:
-            x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, ci - x.shape[-1])))
-        norm = jnp.sqrt(9.0 * x.shape[-1])
-        y = ternary_conv2d(x, lp["packed"], lp["scale"] / norm)
-        x = jnp.where(jnp.abs(y) > th, jnp.sign(y), 0.0)
-        x = _pool(x)
-    return x.mean(axis=(1, 2))
+    """Frontend on the Pallas conv kernel with fused ternarization."""
+    return _deployed(dep, cfg).spatial_forward(x)
 
 
 def tcn_forward_deploy(dep, cfg: CutieNetConfig, feats: jax.Array) -> jax.Array:
-    """TCN head via mapping + Pallas kernel (SAME pad adjusted to causal)."""
-    x = feats
-    th = cfg.act_threshold
-    for lp in dep["tcn"]:
-        d = lp["dilation"]
-        z = wrap_time_axis(x, d)
-        zp = jnp.pad(z, ((0, 0), (1, 0), (0, 0), (0, 0)))
-        norm = jnp.sqrt(cfg.tcn_taps * x.shape[-1])
-        y2 = ternary_conv2d(zp, lp["packed"], lp["scale"] / norm)[:, : z.shape[1]]
-        y = unwrap_time_axis(y2, x.shape[1])
-        x = jnp.where(jnp.abs(y) > th, jnp.sign(y), 0.0)
-    x = x[:, -1, :]
-    return x @ (dep["fc"]["t"].astype(x.dtype) * dep["fc"]["scale"])
+    """TCN head via the §4 mapping + Pallas kernel."""
+    return _deployed(dep, cfg).temporal_forward(feats)
 
-
-# ---------------------------------------------------------------------------
-# Streaming inference with the TCN memory (the silicon's autonomous mode)
-# ---------------------------------------------------------------------------
 
 def make_stream(cfg: CutieNetConfig, batch: Optional[int] = None) -> TCNStream:
     return TCNStream.create(cfg.tcn_steps, cfg.channels, batch=batch)
 
 
 def stream_step(dep, cfg: CutieNetConfig, stream: TCNStream, frame: jax.Array):
-    """One sensor frame in -> (logits, updated stream).
-
-    Exactly the silicon flow: 2-D CNN -> push feature vector into the TCN
-    memory ring -> TCN head over the ordered window.  Past frames are never
-    recomputed (that's what the 576-byte memory buys).
-    """
-    feat = cnn_forward_deploy(dep, cfg, frame)  # [B, C]
-    stream = stream.push(feat)
-    window = stream.ordered()  # [B, T, C] or [T, C]
-    if window.ndim == 2:
-        window = window[None]
-    logits = tcn_forward_deploy(dep, cfg, window)
-    return logits, stream
+    """One sensor frame in -> (logits, updated stream) — the silicon flow."""
+    return _deployed(dep, cfg).stream_step(stream, frame)

@@ -1,4 +1,6 @@
 """The paper's networks: QAT trainability, deploy path, streaming memory."""
+import dataclasses
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -30,12 +32,16 @@ class TestCifarTNN:
 
     def test_qat_training_reduces_loss(self):
         """QAT (STE) steps on synthetic class-separable data must reduce
-        cross-entropy — the training recipe behind the paper's 86%."""
+        cross-entropy — the training recipe behind the paper's 86%.  Runs a
+        32-channel variant of the 9-layer net: identical recipe (STE weights
+        + BN + ternary acts), ~9x cheaper per step, collapses in ~150 steps
+        where the 96-channel net needs ~350."""
+        cfg = dataclasses.replace(CIFAR_TNN, name="cifar_tnn_32ch", channels=32)
         pipe = CifarLikePipeline(32, seed=0, noise=0.5)
-        params = init_cutie_params(jax.random.PRNGKey(2), CIFAR_TNN)
+        params = init_cutie_params(jax.random.PRNGKey(2), cfg)
 
         def loss_fn(p, x, y):
-            logits = cnn_forward_qat(p, CIFAR_TNN, x)
+            logits = cnn_forward_qat(p, cfg, x)
             return -jnp.mean(
                 jnp.take_along_axis(jax.nn.log_softmax(logits), y[:, None], axis=1)
             )
@@ -51,12 +57,15 @@ class TestCifarTNN:
 
         mom = jax.tree_util.tree_map(jnp.zeros_like, params)
         losses = []
-        for _ in range(120):
+        for _ in range(200):
             x, y = pipe.next_batch()
             params, mom, l = step(params, mom, x, y)
             losses.append(float(l))
-        # initial CE ~3.9 (10 classes + margin); converges towards ~2.4
-        assert np.mean(losses[-10:]) < 0.75 * losses[0], (losses[0], losses[-10:])
+        # loss starts ~2.5 and collapses to ~0.2 once the ternary patterns
+        # lock in; compare means to be robust to batch noise
+        assert np.mean(losses[-10:]) < 0.5 * np.mean(losses[:10]), (
+            np.mean(losses[:10]), losses[-10:]
+        )
 
 
 class TestDVSHybrid:
@@ -100,6 +109,22 @@ class TestDVSHybrid:
         # on-chip weight buffer budget scale (hundreds of KB)
         total = sum(int(np.prod(lp["packed"].shape)) for lp in dep["conv"] + dep["tcn"])
         assert total < 1.5e6
+
+    def test_legacy_config_fields_are_honored(self):
+        """The shim must build the graph from the config, not ignore it."""
+        cfg = dataclasses.replace(
+            DVS_CNN_TCN, name="dvs_small", channels=64,
+            tcn_layers=2, tcn_dilations=(1, 2), tcn_steps=8,
+        )
+        p = init_cutie_params(jax.random.PRNGKey(0), cfg)
+        assert len(p["tcn"]) == 2
+        assert p["tcn"][0]["w"].shape == (3, 64, 64)
+        assert p["fc"]["w"].shape == (64, 12)
+        dep = quantize_for_deploy(p, cfg)
+        stream = make_stream(cfg, batch=1)
+        logits, stream = stream_step(dep, cfg, stream, jnp.zeros((1, 64, 64, 2)))
+        assert logits.shape == (1, 12)
+        assert stream.buf.shape == (1, 8, 64)
 
     def test_tcn_memory_silicon_budget(self):
         """24 steps x 96 ch x 2 b = 576 B — the ring buffer matches the
