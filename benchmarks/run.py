@@ -8,7 +8,6 @@ Prints ``name,us_per_call,derived`` CSV rows per the harness contract:
 """
 from __future__ import annotations
 
-import sys
 import time
 
 

@@ -25,10 +25,10 @@ prog = get_net("cifar10_tnn")
 params = prog.init(jax.random.PRNGKey(0))
 x = jnp.sign(jax.random.normal(jax.random.PRNGKey(1), (8, 32, 32, 3)))
 deployed = prog.quantize(params, calib=x)
-logits = deployed.forward(x, backend="pallas")
+logits = deployed.forward(x, backend="fused")
 print(f"  {prog.graph.name}: QAT params -> packed 2-bit deploy -> logits "
-      f"{tuple(logits.shape)}; backends agree: "
-      f"{bool(jnp.allclose(logits, deployed.forward(x, backend='ref'), atol=1e-4))}")
+      f"{tuple(logits.shape)}; fused == ref exactly: "
+      f"{bool((logits == deployed.forward(x, backend='ref')).all())}")
 
 print("=== 1. packed-ternary matmul (CUTIE's arithmetic on TPU) ===")
 w = jax.random.normal(jax.random.PRNGKey(0), (2048, 512))

@@ -15,13 +15,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import get_net
+from repro.api import BACKENDS, get_net
 from repro.data.pipeline import DVSEventPipeline
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--batch", type=int, default=4)
 ap.add_argument("--frames", type=int, default=10)
-ap.add_argument("--backend", default="pallas", choices=["pallas", "ref", "interpret"])
+ap.add_argument("--backend", default="fused", choices=list(BACKENDS))
 ap.add_argument("--seed", type=int, default=0)
 args = ap.parse_args()
 

@@ -12,7 +12,6 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.ternary import sparsity, ternary_quantize_weights

@@ -6,7 +6,7 @@ One network definition drives every execution mode:
     prog     = get_net("cifar10_tnn")
     params   = prog.init(jax.random.PRNGKey(0))
     deployed = prog.quantize(params)
-    logits   = deployed.forward(x, backend="pallas")     # | "ref" | "interpret"
+    logits   = deployed.forward(x, backend="fused")  # | "pallas" | "ref" | "interpret"
     report   = deployed.silicon_report(v=0.5)            # paper Table 1 loop
 
 Submodules:
@@ -33,7 +33,7 @@ from repro.api.graph import (
 from repro.api import quantize
 
 _PROGRAM = ("CutieProgram", "DeployedProgram", "StreamSession", "SiliconReport",
-            "BACKENDS", "export_conv_layers", "silicon_report")
+            "BACKENDS", "check_backend", "export_conv_layers", "silicon_report")
 _REGISTRY = ("register_net", "get_net", "get_graph", "list_nets",
              "cifar10_tnn_graph", "dvs_cnn_tcn_graph")
 

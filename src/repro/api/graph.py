@@ -131,6 +131,20 @@ class CutieGraph:
         """TCN head + classifier, operating on the [B, T, C] window."""
         return self.layers[self._split():]
 
+    def conv_pool_plan(self) -> Tuple[int, ...]:
+        """Per spatial conv2d, the window of an *immediately following* pool
+        layer (0 when the conv feeds anything else) — the fusion plan the
+        deploy backends use to sink CUTIE's pooling unit into the conv
+        kernel's epilogue.  Length == number of spatial conv2d layers."""
+        sp = self.spatial_layers
+        plan: List[int] = []
+        for i, l in enumerate(sp):
+            if l.kind != "conv2d":
+                continue
+            nxt = sp[i + 1] if i + 1 < len(sp) else None
+            plan.append(nxt.window if nxt is not None and nxt.kind == "pool" else 0)
+        return tuple(plan)
+
     @property
     def feature_channels(self) -> int:
         """Width of the feature vector entering the TCN memory (temporal

@@ -7,7 +7,7 @@ the paper's silicon implements:
     params   = prog.init(jax.random.PRNGKey(0))
     logits   = prog.forward_qat(params, x)      # STE fake-quant training path
     deployed = prog.quantize(params, calib=x)   # packed 2-bit weights
-    logits   = deployed.forward(x, backend="pallas")   # | "ref" | "interpret"
+    logits   = deployed.forward(x, backend="fused")    # | "pallas" | "ref" | "interpret"
     session  = deployed.stream(batch=4)         # TCN ring memory (temporal)
     report   = deployed.silicon_report(v=0.5)   # cycles/energy vs Table 1
 
@@ -22,9 +22,22 @@ QAT grid the grids differ slightly and agreement is approximate — both
 tested in tests/test_api.py.
 
 Backends:
-    pallas     Pallas TPU kernels (auto-interpret on CPU) — the deploy target
+    fused      Pallas kernels with conv+scale+ternarize(+2x2 max-pool) fused
+               into one launch per layer, int8 ternary activations between
+               layers — the silicon's 2-bit inter-layer memory model, and
+               the deploy default for serving
+    pallas     Pallas TPU kernels (auto-interpret on CPU), float activations
+               re-ternarized between layers
     interpret  Pallas kernels, interpreter forced — debugging on any host
     ref        pure-jnp oracles from kernels/ref.py — the semantics anchor
+
+All four produce identical logits — bit-exact for "fused" vs "ref" whenever
+every inter-layer tensor is ternary or a dyadic rational of ternary values
+(true for all registry nets: their global_pool windows are power-of-two
+sized), since both paths then accumulate exactly in float32 regardless of
+summation order.  Tested in tests/test_fused_backend.py and gated in CI by
+benchmarks/backend_bench.py; a net whose global_pool mean divides by a
+non-power-of-two could differ in the last ulp at a threshold crossing.
 """
 from __future__ import annotations
 
@@ -33,9 +46,10 @@ from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.api import quantize as q
-from repro.api.graph import CutieGraph, LayerSpec
+from repro.api.graph import CutieGraph
 from repro.core import cutie_arch as arch
 from repro.core.tcn import (
     TCNStream,
@@ -48,13 +62,26 @@ from repro.core.ternary import ste_ternary_acts, ste_ternary_weights
 from repro.kernels.ops import ternary_conv2d
 from repro.kernels.ref import ternary_conv2d_ref
 
-BACKENDS = ("pallas", "ref", "interpret")
+BACKENDS = ("fused", "pallas", "ref", "interpret")
 _BN_EPS = 1e-6
 
 
+def check_backend(backend: str) -> None:
+    """THE backend validation — every entry point routes through here."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+
+
 def _pool(x: jax.Array, window: int) -> jax.Array:
+    # concrete-scalar init so JAX still recognizes the monoid max reducer
+    # (a traced init breaks the reduce_window_max grad path); int inputs
+    # (fused-backend trits) can't hold -inf, use the dtype floor instead.
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        init = -jnp.inf
+    else:
+        init = np.array(jnp.iinfo(x.dtype).min, x.dtype)
     return jax.lax.reduce_window(
-        x, -jnp.inf, jax.lax.max,
+        x, init, jax.lax.max,
         (1, window, window, 1), (1, window, window, 1), "VALID",
     )
 
@@ -69,16 +96,26 @@ def _ternarize(y: jax.Array, threshold: float) -> jax.Array:
     return jnp.where(jnp.abs(y) > threshold, jnp.sign(y), 0.0)
 
 
-def _dispatch_conv(x, packed, eff_scale, backend: str):
+def _dispatch_conv(x, packed, eff_scale, backend: str, *,
+                   threshold: float = 0.5, pool: int = 0):
     """One SAME ternary conv through the selected backend.  ``x`` must
-    already be channel-padded to 4 * packed.shape[2]."""
+    already be channel-padded to 4 * packed.shape[2].
+
+    The "fused" backend runs the whole CUTIE layer — conv, per-OCU scale,
+    threshold unit, optional ``pool``-window max-pool — in a single Pallas
+    launch and emits int8 ternary activations; the other backends return the
+    scaled float accumulator and leave ternarize/pool to the caller."""
+    check_backend(backend)
     if backend == "ref":
         return ternary_conv2d_ref(x, packed, eff_scale)
     if backend == "interpret":
         return ternary_conv2d(x, packed, eff_scale, interpret=True)
-    if backend == "pallas":
-        return ternary_conv2d(x, packed, eff_scale)
-    raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
+    if backend == "fused":
+        return ternary_conv2d(
+            x, packed, eff_scale, fuse_ternary=True, threshold=threshold,
+            fuse_pool=pool, out_dtype=jnp.int8,
+        )
+    return ternary_conv2d(x, packed, eff_scale)
 
 
 def _pad_channels(x: jax.Array, c: int) -> jax.Array:
@@ -232,15 +269,25 @@ class CutieProgram:
         """
         g = self.graph
         tables: Dict = {"conv": [], "tcn": [], "fc": {}}
-        for lp in params.get("conv", []):
+        # Per-layer epilogue metadata rides with the packed weights so the
+        # deploy tables are self-describing for the fused backend (and ready
+        # for per-layer learned thresholds — ROADMAP quantization item).
+        pool_plan = g.conv_pool_plan()
+        for li, lp in enumerate(params.get("conv", [])):
             packed, scale = q.quantize_pack_conv_weights(lp["w"], nu=g.weight_nu)
-            tables["conv"].append({"packed": packed, "scale": scale})
+            tables["conv"].append({
+                "packed": packed, "scale": scale,
+                "threshold": g.act_threshold, "pool": pool_plan[li],
+            })
         tcn_specs = [l for l in g.layers if l.kind == "tcn"]
         for lp, l in zip(params.get("tcn", []), tcn_specs):
             packed, scale = q.quantize_pack_tcn_weights(
                 lp["w"], nu=g.weight_nu, kh=l.kernel[0], kw=l.kernel[1]
             )
-            tables["tcn"].append({"packed": packed, "scale": scale, "dilation": l.dilation})
+            tables["tcn"].append({
+                "packed": packed, "scale": scale, "dilation": l.dilation,
+                "threshold": g.act_threshold,
+            })
         if "fc" in params:
             t, a = q.ternary_quantize_weights(params["fc"]["w"], nu=g.weight_nu, axis=0)
             tables["fc"] = {"t": t, "scale": a.reshape(-1)}
@@ -284,21 +331,26 @@ class DeployedProgram:
 
     # -- per-layer-kind execution -----------------------------------------
 
-    @staticmethod
-    def _check_backend(backend: str) -> None:
-        if backend not in BACKENDS:
-            raise ValueError(f"unknown backend {backend!r}; expected one of {BACKENDS}")
-
     def _eff_scale(self, entry: Dict, fan_in: int) -> jax.Array:
         if "bn_sd" in entry:
             return entry["scale"] / (entry["bn_sd"] + _BN_EPS)
         return entry["scale"] / jnp.sqrt(float(fan_in))
 
+    def _fc(self, x: jax.Array) -> jax.Array:
+        fc = self.tables["fc"]
+        if not jnp.issubdtype(x.dtype, jnp.floating):
+            x = x.astype(jnp.float32)  # fused backend hands int8 trits over
+        return x @ (fc["t"].astype(x.dtype) * fc["scale"])
+
     def spatial_forward(self, x: jax.Array, backend: str = "pallas") -> jax.Array:
         """Frontend (or whole spatial net) on packed weights: [B,H,W,C] ->
-        feature vector / logits."""
+        feature vector / logits.  On the "fused" backend each conv layer is
+        one kernel launch (conv+scale+ternarize, plus the following pool
+        layer sunk into the epilogue) emitting int8 ternary activations —
+        the pool LayerSpec it absorbed is then skipped here."""
         g = self.graph
         ci = 0
+        fused_pools = 0
         for l in g.spatial_layers:
             if l.kind == "conv2d":
                 entry = self.tables["conv"][ci]
@@ -306,17 +358,27 @@ class DeployedProgram:
                 c_pad = 4 * entry["packed"].shape[2]
                 x = _pad_channels(x, c_pad)
                 eff = self._eff_scale(entry, l.kernel[0] * l.kernel[1] * c_pad)
-                y = _dispatch_conv(x, entry["packed"], eff, backend)
-                x = _ternarize(y, g.act_threshold)
+                if backend == "fused":
+                    pool = entry.get("pool", 0)
+                    x = _dispatch_conv(
+                        x, entry["packed"], eff, backend,
+                        threshold=entry.get("threshold", g.act_threshold), pool=pool,
+                    )
+                    fused_pools += 1 if pool else 0
+                else:
+                    y = _dispatch_conv(x, entry["packed"], eff, backend)
+                    x = _ternarize(y, g.act_threshold)
             elif l.kind == "pool":
-                x = _pool(x, l.window)
+                if fused_pools:
+                    fused_pools -= 1
+                else:
+                    x = _pool(x, l.window)
             elif l.kind == "global_pool":
                 x = x.mean(axis=(1, 2))
             elif l.kind == "flatten":
                 x = x.reshape(x.shape[0], -1)
             elif l.kind == "fc":
-                fc = self.tables["fc"]
-                x = x @ (fc["t"].astype(x.dtype) * fc["scale"])
+                x = self._fc(x)
         return x
 
     def temporal_forward(self, feats: jax.Array, backend: str = "pallas") -> jax.Array:
@@ -331,15 +393,21 @@ class DeployedProgram:
             kh = l.kernel[0]
             zp = jnp.pad(z, ((0, 0), ((kh - 1) - (kh - 1) // 2, 0), (0, 0), (0, 0)))
             eff = self._eff_scale(entry, l.taps * x.shape[-1])
-            y2 = _dispatch_conv(zp, entry["packed"], eff, backend)[:, : z.shape[1]]
-            y = unwrap_time_axis(y2, x.shape[1])
-            x = _ternarize(y, g.act_threshold)
+            if backend == "fused":
+                y2 = _dispatch_conv(
+                    zp, entry["packed"], eff, backend,
+                    threshold=entry.get("threshold", g.act_threshold),
+                )[:, : z.shape[1]]
+                x = unwrap_time_axis(y2, x.shape[1])
+            else:
+                y2 = _dispatch_conv(zp, entry["packed"], eff, backend)[:, : z.shape[1]]
+                y = unwrap_time_axis(y2, x.shape[1])
+                x = _ternarize(y, g.act_threshold)
         for l in g.temporal_layers:
             if l.kind == "last_step":
                 x = x[:, -1, :]
             elif l.kind == "fc":
-                fc = self.tables["fc"]
-                x = x @ (fc["t"].astype(x.dtype) * fc["scale"])
+                x = self._fc(x)
         return x
 
     def forward(self, x: jax.Array, backend: str = "pallas") -> jax.Array:
@@ -348,7 +416,7 @@ class DeployedProgram:
         ring window (last tcn_steps frames, zero history on the left) —
         bit-identical to streaming the frames through ``stream()`` (tested,
         including clips longer than the ring)."""
-        self._check_backend(backend)
+        check_backend(backend)
         g = self.graph
         if not g.is_temporal:
             return self.spatial_forward(x, backend)
@@ -365,9 +433,9 @@ class DeployedProgram:
         """Pure-functional step: one sensor frame -> (logits, new stream).
         CNN frontend -> push feature vector into the ring -> TCN head over
         the ordered window; past frames are never recomputed."""
-        self._check_backend(backend)
+        check_backend(backend)
         feat = self.spatial_forward(frame, backend)
-        stream = stream.push(feat)
+        stream = stream.push(feat.astype(stream.buf.dtype))
         window = stream.ordered()
         if window.ndim == 2:
             window = window[None]
@@ -396,8 +464,7 @@ class StreamSession:
 
     def __init__(self, deployed: DeployedProgram, batch: Optional[int] = None,
                  backend: str = "pallas", jit: bool = True):
-        if backend not in BACKENDS:
-            raise ValueError(f"unknown backend {backend!r}")
+        check_backend(backend)
         self.deployed = deployed
         self.backend = backend
         self.batch = batch

@@ -13,7 +13,7 @@ Legacy aliases ``cutie_cifar10`` / ``cutie_dvs`` map to the same graphs.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Union
+from typing import Callable, Dict, List, Tuple, Union
 
 from repro.api.graph import (
     CutieGraph,
@@ -74,54 +74,75 @@ def list_nets() -> List[str]:
 # The paper's two benchmark networks
 # ---------------------------------------------------------------------------
 
-def cifar10_tnn_graph(channels: int = 96, n_classes: int = 10) -> CutieGraph:
+def cifar10_tnn_graph(
+    channels: int = 96,
+    n_classes: int = 10,
+    input_hw: Tuple[int, int] = (32, 32),
+    name: str = "cifar10_tnn",
+) -> CutieGraph:
     """VGG-like 9-layer TNN: 2x conv @32, pool, 3x conv @16, pool,
-    3x conv @8, pool, flatten, FC."""
+    3x conv @8, pool, flatten, FC.  ``input_hw`` must be divisible by 8
+    (three 2x2 pools); non-default sizes drop the paper calibration."""
     c = channels
+    h, w = input_hw
     layers = (
         conv2d(3, c), conv2d(c, c), pool(),
         conv2d(c, c), conv2d(c, c), conv2d(c, c), pool(),
         conv2d(c, c), conv2d(c, c), conv2d(c, c), pool(),
-        flatten(), fc(16 * c, n_classes),
+        flatten(), fc((h // 8) * (w // 8) * c, n_classes),
     )
+    is_paper = channels == 96 and input_hw == (32, 32) and n_classes == 10
     return CutieGraph(
-        name="cifar10_tnn",
+        name=name,
         layers=layers,
-        input_hw=(32, 32),
+        input_hw=input_hw,
         input_ch=3,
         n_classes=n_classes,
-        paper_energy_uj=PAPER["cifar_energy_uj"],
-        paper_inf_per_s=PAPER["cifar_inf_per_s"],
+        paper_energy_uj=PAPER["cifar_energy_uj"] if is_paper else None,
+        paper_inf_per_s=PAPER["cifar_inf_per_s"] if is_paper else None,
     )
 
 
-def dvs_cnn_tcn_graph(channels: int = 96, n_classes: int = 12) -> CutieGraph:
+def dvs_cnn_tcn_graph(
+    channels: int = 96,
+    n_classes: int = 12,
+    input_hw: Tuple[int, int] = (64, 64),
+    tcn_steps: int = PAPER["tcn_steps"],
+    name: str = "dvs_cnn_tcn",
+) -> CutieGraph:
     """Hybrid gesture network of [6]: 5 conv+pool stages (64 -> 2 px),
     global pool to a feature vector, 4 dilated TCN layers (D = 1,2,4,8)
     through the §4 mapping, last-step FC head.  One classification = 5 CNN
-    passes through the TCN memory + the TCN head (paper's counting)."""
+    passes through the TCN memory + the TCN head (paper's counting).
+
+    Frontend widths scale with ``channels`` (2c/3, 2c/3, c, c, c — the
+    paper's 64/64/96/96/96 at c=96); ``input_hw`` must be divisible by 32
+    (five 2x2 pools).  Non-default sizes drop the paper calibration."""
     c = channels
+    c23 = 2 * c // 3
     layers = (
-        conv2d(2, 64), pool(),
-        conv2d(64, 64), pool(),
-        conv2d(64, 96), pool(),
-        conv2d(96, 96), pool(),
-        conv2d(96, c), pool(),
+        conv2d(2, c23), pool(),
+        conv2d(c23, c23), pool(),
+        conv2d(c23, c), pool(),
+        conv2d(c, c), pool(),
+        conv2d(c, c), pool(),
         global_pool(),
         tcn(c, c, dilation=1), tcn(c, c, dilation=2),
         tcn(c, c, dilation=4), tcn(c, c, dilation=8),
         last_step(), fc(c, n_classes),
     )
+    is_paper = (channels == 96 and input_hw == (64, 64)
+                and tcn_steps == PAPER["tcn_steps"] and n_classes == 12)
     return CutieGraph(
-        name="dvs_cnn_tcn",
+        name=name,
         layers=layers,
-        input_hw=(64, 64),
+        input_hw=input_hw,
         input_ch=2,
         n_classes=n_classes,
-        tcn_steps=PAPER["tcn_steps"],
+        tcn_steps=tcn_steps,
         passes_per_inference=5,
-        paper_energy_uj=PAPER["dvs_energy_uj"],
-        paper_inf_per_s=PAPER["dvs_inf_per_s"] / 5.0,
+        paper_energy_uj=PAPER["dvs_energy_uj"] if is_paper else None,
+        paper_inf_per_s=PAPER["dvs_inf_per_s"] / 5.0 if is_paper else None,
     )
 
 
@@ -130,3 +151,14 @@ register_net("dvs_cnn_tcn", dvs_cnn_tcn_graph)
 # legacy config names from configs/cutie_nets.py
 register_net("cutie_cifar10", cifar10_tnn_graph)
 register_net("cutie_dvs", dvs_cnn_tcn_graph)
+# shrunken variants with the same layer structure — CI bench-smoke targets
+register_net(
+    "cifar10_tnn_smoke",
+    lambda: cifar10_tnn_graph(channels=8, input_hw=(16, 16), name="cifar10_tnn_smoke"),
+)
+register_net(
+    "dvs_cnn_tcn_smoke",
+    lambda: dvs_cnn_tcn_graph(
+        channels=12, input_hw=(32, 32), tcn_steps=8, name="dvs_cnn_tcn_smoke"
+    ),
+)

@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Sequence, Tuple
+from typing import List, Sequence
 
 # ---------------------------------------------------------------------------
 # Paper-reported constants (ground truth for validation)

@@ -33,7 +33,7 @@ oldest tap, matching w[N-k] in Eq. 1 where k=N hits x~[n - (N-1)D]).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

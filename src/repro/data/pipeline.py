@@ -15,9 +15,8 @@ Pipelines:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -73,7 +73,10 @@ def ternary_matmul(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_cout", "fuse_ternary", "threshold", "interpret")
+    jax.jit,
+    static_argnames=(
+        "block_cout", "fuse_ternary", "threshold", "fuse_pool", "interpret", "out_dtype"
+    ),
 )
 def ternary_conv2d(
     x: jax.Array,
@@ -83,9 +86,14 @@ def ternary_conv2d(
     block_cout: int = 128,
     fuse_ternary: bool = False,
     threshold: float = 0.5,
+    fuse_pool: int = 0,
     interpret: bool | None = None,
+    out_dtype=None,
 ):
-    """SAME ternary conv over [B, H, W, C_in]."""
+    """SAME ternary conv over [B, H, W, C_in].  With ``fuse_ternary`` (and
+    optionally ``fuse_pool``/``out_dtype=jnp.int8``) the whole CUTIE layer —
+    conv, threshold unit, pooling — is one kernel launch emitting 2-bit-class
+    ternary activations."""
     if interpret is None:
         interpret = _on_cpu()
     kh, kw, c4, c_out = w_packed.shape
@@ -97,6 +105,7 @@ def ternary_conv2d(
     sc = _pad_to(scale.reshape(-1), 0, bc)
     y = ternary_conv2d_pallas(
         x, wp, sc, block_cout=bc, fuse_ternary=fuse_ternary,
-        threshold=threshold, interpret=interpret, out_dtype=x.dtype,
+        threshold=threshold, fuse_pool=fuse_pool, interpret=interpret,
+        out_dtype=out_dtype or x.dtype,
     )
     return y[..., :c_out]

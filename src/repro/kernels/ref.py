@@ -25,8 +25,12 @@ def ternary_conv2d_ref(
     *,
     fuse_ternary: bool = False,
     threshold: float = 0.5,
+    fuse_pool: int = 0,
+    out_dtype=None,
 ) -> jax.Array:
-    """SAME conv with ternary packed weights [KH,KW,C_in/4,C_out] + scale."""
+    """SAME conv with ternary packed weights [KH,KW,C_in/4,C_out] + scale.
+    ``fuse_pool`` > 1 appends a window/stride ``fuse_pool`` max-pool after
+    the optional ternarization — the oracle for the fused kernel epilogue."""
     w = unpack_ternary(w_packed, axis=2).astype(jnp.float32)
     y = jax.lax.conv_general_dilated(
         x.astype(jnp.float32),
@@ -37,4 +41,9 @@ def ternary_conv2d_ref(
     ) * scale.reshape(1, 1, 1, -1).astype(jnp.float32)
     if fuse_ternary:
         y = jnp.where(jnp.abs(y) > threshold, jnp.sign(y), 0.0)
-    return y.astype(x.dtype)
+    if fuse_pool > 1:
+        p = fuse_pool
+        y = jax.lax.reduce_window(
+            y, -jnp.inf, jax.lax.max, (1, p, p, 1), (1, p, p, 1), "VALID"
+        )
+    return y.astype(out_dtype or x.dtype)

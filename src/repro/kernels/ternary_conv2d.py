@@ -13,8 +13,11 @@ Weights arrive 2-bit packed along C_in: [KH, KW, C_in/4, C_out] uint8 — the
 per-output-tile weight traffic is KH*KW*C_in*bn/4 bytes, once.
 
 The fused epilogue optionally applies CUTIE's activation ternarization
-(sign/threshold), which the silicon folds into the OCU pipeline after the
-adder tree — so a whole TNN layer is a single kernel launch.
+(sign/threshold) and the layer's 2x2 max-pool, which the silicon folds into
+the OCU pipeline after the adder tree (ThFU + pooling unit) — so a whole TNN
+layer, pooling included, is a single kernel launch whose output is the int8
+ternary activation map.  The wide float accumulator never leaves the kernel:
+inter-layer traffic is exactly the silicon's 2-bit activation memory model.
 
 TCN layers arrive here already *mapped* (core.tcn.dilated1d_to_2d): the same
 kernel executes dilated 1-D convolutions with zero marshalling, exactly the
@@ -42,7 +45,7 @@ def _unpack_w(wp: jax.Array, dtype) -> jax.Array:
 
 def _tconv_kernel(
     x_ref, wp_ref, scale_ref, o_ref, acc_ref, *, h: int, w: int, kh: int, kw: int,
-    fuse_ternary: bool, threshold: float,
+    fuse_ternary: bool, threshold: float, fuse_pool: int,
 ):
     """One (sample, output-channel-tile) grid cell: full-image conv."""
     c_in = x_ref.shape[-1]
@@ -64,12 +67,21 @@ def _tconv_kernel(
     y = acc_ref[...] * scale_ref[...].astype(jnp.float32)
     if fuse_ternary:
         y = jnp.where(jnp.abs(y) > threshold, jnp.sign(y), 0.0)
-    o_ref[...] = y.reshape(1, h, w, bn).astype(o_ref.dtype)
+    if fuse_pool > 1:
+        # (h*w, bn) is row-major (h, w, bn): group both spatial axes by the
+        # pool window and reduce — the silicon's pooling unit, in-epilogue.
+        p = fuse_pool
+        y = y.reshape(h // p, p, w // p, p, bn).max(axis=(1, 3))
+        o_ref[...] = y.reshape(1, h // p, w // p, bn).astype(o_ref.dtype)
+    else:
+        o_ref[...] = y.reshape(1, h, w, bn).astype(o_ref.dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_cout", "interpret", "fuse_ternary", "threshold", "out_dtype"),
+    static_argnames=(
+        "block_cout", "interpret", "fuse_ternary", "threshold", "fuse_pool", "out_dtype"
+    ),
 )
 def ternary_conv2d_pallas(
     x: jax.Array,
@@ -79,24 +91,30 @@ def ternary_conv2d_pallas(
     block_cout: int = 128,
     fuse_ternary: bool = False,
     threshold: float = 0.5,
+    fuse_pool: int = 0,
     interpret: bool = True,
     out_dtype=None,
 ):
     """SAME ternary conv.  x: [B, H, W, C_in] (unpadded), w_packed:
     [KH, KW, C_in/4, C_out] uint8, scale: [C_out].  C_out must be a multiple
-    of ``block_cout`` (ops.py pads)."""
+    of ``block_cout`` (ops.py pads).  ``fuse_pool`` > 1 appends a
+    window/stride ``fuse_pool`` max-pool to the epilogue (after the optional
+    ternarization), shrinking the output to [B, H/p, W/p, C_out]."""
     b, h, w, c_in = x.shape
     kh, kw, c4, c_out = w_packed.shape
     assert c_in == 4 * c4, (c_in, c4)
     assert c_out % block_cout == 0
+    if fuse_pool > 1:
+        assert h % fuse_pool == 0 and w % fuse_pool == 0, (h, w, fuse_pool)
     out_dtype = out_dtype or x.dtype
     ph, pw = kh // 2, kw // 2
     xp = jnp.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
     scale = scale.reshape(1, c_out)
+    oh, ow = (h // fuse_pool, w // fuse_pool) if fuse_pool > 1 else (h, w)
 
     kern = functools.partial(
         _tconv_kernel, h=h, w=w, kh=kh, kw=kw,
-        fuse_ternary=fuse_ternary, threshold=threshold,
+        fuse_ternary=fuse_ternary, threshold=threshold, fuse_pool=fuse_pool,
     )
     return pl.pallas_call(
         kern,
@@ -106,8 +124,8 @@ def ternary_conv2d_pallas(
             pl.BlockSpec((kh, kw, c4, block_cout), lambda i, j: (0, 0, 0, j)),
             pl.BlockSpec((1, block_cout), lambda i, j: (0, j)),
         ],
-        out_specs=pl.BlockSpec((1, h, w, block_cout), lambda i, j: (i, 0, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((b, h, w, c_out), out_dtype),
+        out_specs=pl.BlockSpec((1, oh, ow, block_cout), lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, oh, ow, c_out), out_dtype),
         scratch_shapes=[pltpu.VMEM((h * w, block_cout), jnp.float32)],
         interpret=interpret,
     )(xp, w_packed, scale)

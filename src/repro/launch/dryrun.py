@@ -34,7 +34,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, get_config, shape_applicable
 from repro.launch.mesh import make_production_mesh
-from repro.launch.sharding import ShardingRules, rules_for_cell
+from repro.launch.sharding import rules_for_cell
 from repro.launch.steps import (
     input_specs,
     make_decode_step,

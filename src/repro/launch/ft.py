@@ -25,8 +25,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import time
-from collections import deque
 from typing import Callable, Dict, Optional
 
 from repro.ckpt.checkpoint import latest_step, restore_checkpoint, save_checkpoint

@@ -11,7 +11,12 @@ Two serving paths:
     StreamSession, with the per-frame silicon cost reported at exit.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke --tokens 16
-    PYTHONPATH=src python -m repro.launch.serve --dvs --frames 8 --backend pallas
+    PYTHONPATH=src python -m repro.launch.serve --dvs --frames 8 --backend fused
+
+    The DVS default backend is "fused": conv+threshold(+pool) in one kernel
+    launch per layer, int8 ternary activations between layers — the
+    silicon's 2-bit activation memory model (see benchmarks/backend_bench.py
+    for measured speedups vs the unfused backends).
 """
 from __future__ import annotations
 
@@ -102,8 +107,8 @@ def main(argv=None):
     ap.add_argument("--quant", default="none",
                     choices=["none", "ternary", "ternary_packed"])
     ap.add_argument("--dvs", action="store_true")
-    ap.add_argument("--backend", default="pallas",
-                    choices=["pallas", "ref", "interpret"])
+    from repro.api import BACKENDS
+    ap.add_argument("--backend", default="fused", choices=list(BACKENDS))
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)

@@ -18,11 +18,9 @@ wk/wv (GQA KV heads < model-axis size for every assigned arch), w_dq/w_dkv
 """
 from __future__ import annotations
 
-import re
 from typing import Any, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig, ShapeConfig

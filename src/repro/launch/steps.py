@@ -7,8 +7,7 @@ a given (arch x shape) cell: weak-type-correct, shardable, no allocation.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -16,14 +16,13 @@ import time
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config
 from repro.data.pipeline import LMTokenPipeline
 from repro.launch.ft import run_with_restarts
 from repro.launch.mesh import make_local_mesh
 from repro.launch.sharding import ShardingRules
-from repro.launch.steps import TrainState, make_train_state, make_train_step
+from repro.launch.steps import make_train_state, make_train_step
 from repro.optim.adamw import AdamWConfig
 
 

@@ -31,7 +31,6 @@ NEG_INF = -1e30
 def attn_init(key, cfg: ModelConfig, dtype=jnp.float32):
     ks = jax.random.split(key, 8)
     h, kv, hd, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
-    q = dict(quant=cfg.quant)
     if cfg.attn_type == "mla":
         qk_dim = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
         p = {
@@ -264,7 +263,6 @@ def _cache_write(cache, kv, idx):
 
 def _cache_fill(cache, kv):
     """Prefill: write kv[0:S] into the cache prefix."""
-    s = kv.shape[1]
     return jax.lax.dynamic_update_slice(cache, kv.astype(cache.dtype), (0, 0, 0, 0))
 
 

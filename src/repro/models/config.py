@@ -14,7 +14,6 @@ multimodal backbones.  The paper's technique is exposed as ``quant``:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

@@ -19,7 +19,6 @@ Modes: ``train`` (logits for loss), ``prefill`` (fills caches), ``decode``
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

@@ -9,7 +9,7 @@ import pytest
 
 from repro import api
 from repro.api import quantize as apiq
-from repro.api.program import CutieProgram, DeployedProgram, export_conv_layers
+from repro.api.program import CutieProgram, export_conv_layers
 from repro.core import cutie_arch as arch
 from repro.core.ternary import unpack_ternary
 from repro.kernels import ops as kops

@@ -9,7 +9,7 @@ import pytest
 
 from repro.configs import ARCH_IDS, get_config
 from repro.launch.steps import make_train_state, make_train_step
-from repro.models.model import cache_spec, forward, init_cache, init_params, lm_loss
+from repro.models.model import forward, init_cache, init_params, lm_loss
 from repro.optim.adamw import AdamWConfig
 
 B, S = 2, 24

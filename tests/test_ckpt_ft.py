@@ -1,6 +1,4 @@
 """Checkpointing (atomic, elastic) + fault-tolerance loop + data pipeline."""
-import os
-import shutil
 
 import numpy as np
 import jax

@@ -1,5 +1,4 @@
 """Validation of the CUTIE analytical silicon model against the paper."""
-import math
 
 import pytest
 
@@ -7,7 +6,6 @@ from repro.core.cutie_arch import (
     KAPPA_PAPER_OPS,
     OPS_PER_CYCLE_PHYSICAL,
     PAPER,
-    Calibration,
     ConvLayer,
     CutieHW,
     apply_calibration,

@@ -4,7 +4,6 @@ import dataclasses
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.data.pipeline import CifarLikePipeline, DVSEventPipeline
 from repro.models.cutie_net import (
@@ -18,7 +17,6 @@ from repro.models.cutie_net import (
     quantize_for_deploy,
     stream_step,
     tcn_forward_deploy,
-    tcn_forward_qat,
 )
 
 

@@ -12,7 +12,6 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.tcn import (
     TCNStream,
-    conv2d_undilated,
     dilated1d_via_2d,
     dilated_causal_conv1d,
     project_weights_to_2d,
