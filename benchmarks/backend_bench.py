@@ -154,8 +154,11 @@ def run(args) -> int:
         },
         "results": results,
     }
-    # smoke runs write next to, not over, the committed full-run trajectory;
-    # CI passes --out BENCH_backends.json explicitly for the artifact upload
+    # smoke runs write next to, not over, the committed full-run trajectory.
+    # BENCH_backends.smoke.json is the COMMITTED bench-regression baseline
+    # (refresh it by re-running --smoke --repeats 5 and committing); CI
+    # writes its fresh measurement to BENCH_backends.fresh.json via --out
+    # and gates it with scripts/check_bench_regression.py
     default_name = "BENCH_backends.smoke.json" if args.smoke else "BENCH_backends.json"
     out = Path(args.out) if args.out else REPO_ROOT / default_name
     out.write_text(json.dumps(payload, indent=2) + "\n")

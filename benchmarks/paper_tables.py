@@ -42,7 +42,8 @@ def table1():
         ("cifar_energy_uJ(calibrated)", r05.energy_uj, PAPER["cifar_energy_uj"]),
         ("cifar_inf_per_s(calibrated)", r05.inf_per_s, PAPER["cifar_inf_per_s"]),
         ("cifar_energy_uJ(ideal)", r05.ideal.energy_j * 1e6, PAPER["cifar_energy_uj"]),
-        ("soa_improvement_vs_[8]", PAPER["peak_eff_0v5_topsw"] / PAPER["soa_binary_10nm_topsw"], 1.67),
+        ("soa_improvement_vs_[8]",
+         PAPER["peak_eff_0v5_topsw"] / PAPER["soa_binary_10nm_topsw"], 1.67),
         ("energy_vs_[9]_13.86uJ", PAPER["soa_cifar_energy_uj"][0] / r05.energy_uj, 13.86 / 2.72),
         ("energy_vs_[8]_3.2uJ", PAPER["soa_cifar_energy_uj"][1] / r05.energy_uj, 3.2 / 2.72),
         ("calib_cycle_overhead", cal.cycle_overhead, None),

@@ -37,7 +37,8 @@ def main() -> None:
 
     r = bench_matmul()
     _row(f"kernel/{r['name']}", r["pallas_interp_us"],
-         f"dense_us={r['dense_us']:.1f};bytes_reduction={r['bytes_reduction']:.1f}x;err={r['max_err_vs_ref']:.2g}")
+         f"dense_us={r['dense_us']:.1f};bytes_reduction={r['bytes_reduction']:.1f}x;"
+         f"err={r['max_err_vs_ref']:.2g}")
     r = bench_conv()
     _row(f"kernel/{r['name']}", r["pallas_interp_us"],
          f"ref_us={r['ref_packed_us']:.1f};err={r['max_err_vs_ref']:.2g}")
@@ -73,9 +74,11 @@ def main() -> None:
             best = max(rows, key=lambda r: r["roofline_fraction"])
             _row("roofline/cells_ok", None, f"n={len(rows)}")
             _row("roofline/best", None,
-                 f"{best['arch']}/{best['shape']}={best['roofline_fraction']*100:.1f}%;bound={best['dominant']}")
+                 f"{best['arch']}/{best['shape']}={best['roofline_fraction']*100:.1f}%;"
+                 f"bound={best['dominant']}")
             _row("roofline/worst", None,
-                 f"{worst['arch']}/{worst['shape']}={worst['roofline_fraction']*100:.1f}%;bound={worst['dominant']}")
+                 f"{worst['arch']}/{worst['shape']}={worst['roofline_fraction']*100:.1f}%;"
+                 f"bound={worst['dominant']}")
     except Exception as e:  # noqa: BLE001
         _row("roofline/unavailable", None, str(e)[:60])
 

@@ -1,0 +1,199 @@
+"""Serving benchmark: pool sizes x backends for the multi-sensor pool.
+
+The harness behind ``BENCH_serving.json`` (repo root) — the throughput
+trajectory for `repro.serving.SessionPool` continuous batching.  For every
+(net, pool_size, backend) cell it
+
+  * drives a full arrival/departure simulation (2x pool_size sensor
+    streams, staggered arrivals) through `ContinuousBatcher` and measures
+    frames/s and mean pool occupancy (compile excluded via a warmup tick),
+  * measures the sequential baseline — the same streams served one at a
+    time by a single batch-1 `StreamSession` — and reports the pool's
+    speedup over it,
+  * spot-checks one stream's pooled logits against an independent
+    `StreamSession` replay (bit-exact) and exits non-zero on mismatch,
+    mirroring the backend bench's CI contract.
+
+On a CPU host the Pallas backends run in interpreter mode, so wall-clock is
+directional (the JSON's ``meta.jax_backend`` records the host); the
+bit-exactness column is meaningful everywhere.
+
+    python benchmarks/serving_bench.py                    # full net sweep
+    python benchmarks/serving_bench.py --smoke            # tiny net, CI cell
+    python benchmarks/serving_bench.py --pools 2 4 8 --backends fused ref
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro import api  # noqa: E402
+from repro.serving import ContinuousBatcher, StreamRequest  # noqa: E402
+
+FULL_NET = "dvs_cnn_tcn"
+SMOKE_NET = "dvs_cnn_tcn_smoke"
+
+
+def _event_clips(graph, n_streams: int, frames: int, key) -> jax.Array:
+    shape = (n_streams, frames, *graph.input_hw, graph.input_ch)
+    return (jax.random.uniform(key, shape) < 0.05).astype(jnp.float32)
+
+
+def _run_pool(deployed, clips, pool_size: int, backend: str):
+    """(wall seconds, stats dict, final logits by stream index)."""
+    pool = deployed.serve(pool_size, backend=backend)
+    warm = deployed.graph  # warmup: compile the fixed-shape step once
+    pool.admit("__warm__")
+    pool.step({"__warm__": np.zeros((*warm.input_hw, warm.input_ch), np.float32)})
+    pool.evict("__warm__")
+
+    batcher = ContinuousBatcher(pool)
+    for i in range(clips.shape[0]):
+        batcher.submit(
+            StreamRequest(stream_id=f"s{i}", frames=clips[i], arrival=i)
+        )
+    t0 = time.perf_counter()
+    results = batcher.run()
+    jax.block_until_ready(pool.state.buf)
+    wall = time.perf_counter() - t0
+    stats = batcher.stats()
+    stats["trace_count"] = pool.trace_count
+    finals = {int(r.stream_id[1:]): r.logits for r in results}
+    return wall, stats, finals
+
+
+def _run_sequential(deployed, clips, backend: str):
+    """The no-batching baseline: one batch-1 session, streams end to end."""
+    session = deployed.stream(batch=1, backend=backend)
+    session.step(np.zeros((1, *clips.shape[2:]), np.float32))  # compile
+    session.reset()
+    finals = {}
+    t0 = time.perf_counter()
+    for i in range(clips.shape[0]):
+        session.reset()
+        for t in range(clips.shape[1]):
+            logits = session.step(clips[i : i + 1, t])
+        finals[i] = np.asarray(logits)[0]
+    jax.block_until_ready(logits)
+    return time.perf_counter() - t0, finals
+
+
+def bench_cell(deployed, clips, pool_size: int, backend: str):
+    pool_wall, stats, pool_finals = _run_pool(deployed, clips, pool_size, backend)
+    seq_wall, seq_finals = _run_sequential(deployed, clips, backend)
+    n_frames = clips.shape[0] * clips.shape[1]
+    check_idx = 0
+    exact = bool((pool_finals[check_idx] == seq_finals[check_idx]).all())
+    return {
+        "pool_size": pool_size,
+        "backend": backend,
+        "streams": int(clips.shape[0]),
+        "frames_per_stream": int(clips.shape[1]),
+        "pool_wall_s": pool_wall,
+        "pool_frames_per_s": n_frames / pool_wall,
+        "sequential_wall_s": seq_wall,
+        "sequential_frames_per_s": n_frames / seq_wall,
+        "speedup_vs_sequential": seq_wall / pool_wall,
+        "mean_occupancy": stats["mean_occupancy"],
+        "ticks": stats["ticks"],
+        "trace_count": stats["trace_count"],
+        "exact_vs_single_session": exact,
+    }
+
+
+def run(args) -> int:
+    net = args.net or (SMOKE_NET if args.smoke else FULL_NET)
+    pools = args.pools or ([2, 4] if args.smoke else [2, 4, 8])
+    backends = args.backends or ["fused", "ref"]
+    frames = args.frames or (4 if args.smoke else 6)
+
+    prog = api.get_net(net)
+    g = prog.graph
+    params = prog.init(jax.random.PRNGKey(0))
+    calib = _event_clips(g, 2, frames, jax.random.PRNGKey(1))
+    deployed = prog.quantize(params, calib=calib)
+
+    results, failures = [], []
+    for pool_size in pools:
+        clips = _event_clips(
+            g, 2 * pool_size, frames, jax.random.PRNGKey(2 + pool_size)
+        )
+        for backend in backends:
+            row = bench_cell(deployed, clips, pool_size, backend)
+            results.append({"net": net, **row})
+            if not row["exact_vs_single_session"]:
+                failures.append(
+                    f"{net}/pool{pool_size}/{backend}: pooled logits != "
+                    f"single-session logits"
+                )
+            if row["trace_count"] != 1:
+                failures.append(
+                    f"{net}/pool{pool_size}/{backend}: step retraced "
+                    f"{row['trace_count']}x (continuous batching broken)"
+                )
+            print(
+                f"[serving-bench] {net:>18s} pool{pool_size} {backend:>6s}: "
+                f"{row['pool_frames_per_s']:8.1f} frames/s "
+                f"(x{row['speedup_vs_sequential']:.2f} vs sequential), "
+                f"occupancy {row['mean_occupancy']:.2f}, "
+                f"exact={row['exact_vs_single_session']}"
+            )
+
+    payload = {
+        "schema": 1,
+        "meta": {
+            "smoke": bool(args.smoke),
+            "net": net,
+            "jax_backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "frames_per_stream": frames,
+            "generated_unix": int(time.time()),
+            "note": (
+                "Pool frames/s is host wall-clock over a staggered-arrival "
+                "continuous-batching simulation; Pallas backends interpret "
+                "on non-TPU hosts, so absolute numbers there are "
+                "directional.  exact_vs_single_session and trace_count==1 "
+                "are the serving correctness contract."
+            ),
+        },
+        "results": results,
+    }
+    default_name = "BENCH_serving.smoke.json" if args.smoke else "BENCH_serving.json"
+    out = Path(args.out) if args.out else REPO_ROOT / default_name
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"[serving-bench] wrote {out} ({len(results)} cells)")
+    if failures:
+        for f in failures:
+            print(f"[serving-bench] FAIL {f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny registry net, small pools — the CI cell")
+    ap.add_argument("--net", default=None)
+    ap.add_argument("--pools", nargs="*", type=int, default=None)
+    ap.add_argument("--backends", nargs="*", default=None,
+                    choices=list(api.BACKENDS))
+    ap.add_argument("--frames", type=int, default=None,
+                    help="frames per sensor stream")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: <repo>/BENCH_serving.json)")
+    return run(ap.parse_args(argv))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -52,7 +52,8 @@ print("  mapping exact for dilations 1,2,4,8 — TCNs run on the 2-D engine")
 
 print("=== 3. CUTIE silicon model vs paper (deployed.silicon_report) ===")
 rep = deployed.silicon_report(v=0.5)
-print(f"  peak efficiency  : {rep.peak_eff_topsw:7.0f} TOp/s/W (paper {PAPER['peak_eff_0v5_topsw']:.0f})")
+print(f"  peak efficiency  : {rep.peak_eff_topsw:7.0f} TOp/s/W "
+      f"(paper {PAPER['peak_eff_0v5_topsw']:.0f})")
 print(f"  CIFAR-10 energy  : {rep.energy_uj:7.2f} uJ/inf  (paper {PAPER['cifar_energy_uj']})")
 print(f"  CIFAR-10 rate    : {rep.inf_per_s:7.0f} inf/s   (paper {PAPER['cifar_inf_per_s']:.0f})")
 print(f"  calibration consistent: {rep.calibration.consistent}")

@@ -1,0 +1,74 @@
+"""Multi-sensor continuous batching: many DVS streams, one jitted batch.
+
+The paper's silicon serves ONE always-on sensor at 8000 inf/s; this demo
+serves a whole fleet on the software stack.  Sensors come online staggered,
+stream through a fixed-shape `SessionPool` (slot-masked TCN ring state,
+per-slot cursors), and finished streams hand their slot to the next arrival
+without retracing — CUTIE's always-full-compute-units principle applied to
+serving.  Mid-run, one stream is evicted, carried around as a `StreamState`
+pytree, and resumed in a standalone `StreamSession` with identical logits.
+
+    PYTHONPATH=src python examples/serve_sensor_pool.py [--pool 4] [--frames 6]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.api import BACKENDS, get_net
+from repro.data.pipeline import DVSEventPipeline
+from repro.serving import ContinuousBatcher, StreamRequest
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--pool", type=int, default=4)
+ap.add_argument("--streams", type=int, default=0, help="0 = 2x pool")
+ap.add_argument("--frames", type=int, default=6)
+ap.add_argument("--backend", default="fused", choices=list(BACKENDS))
+ap.add_argument("--net", default="dvs_cnn_tcn_smoke")
+ap.add_argument("--seed", type=int, default=0)
+args = ap.parse_args()
+
+n_streams = args.streams or 2 * args.pool
+prog = get_net(args.net)
+g = prog.graph
+params = prog.init(jax.random.PRNGKey(args.seed))
+pipe = DVSEventPipeline(n_streams, steps=args.frames, hw=g.input_hw[0],
+                        seed=args.seed)
+frames, labels = pipe.next_batch()
+deployed = prog.quantize(params, calib=frames)
+
+print(f"[pool] {n_streams} sensors x {args.frames} frames -> "
+      f"{args.pool}-slot pool ({args.backend})")
+pool = deployed.serve(args.pool, backend=args.backend)
+batcher = ContinuousBatcher(pool)
+for i in range(n_streams):
+    batcher.submit(StreamRequest(f"sensor-{i}", frames[i],
+                                 label=int(labels[i]), arrival=i))
+
+t0 = time.time()
+results = batcher.run()
+wall = time.time() - t0
+stats = batcher.stats()
+print(f"[pool] {stats['frames_processed']} frames in {stats['ticks']} ticks "
+      f"({wall:.2f} s), mean occupancy {stats['mean_occupancy']:.2f}, "
+      f"step retraces {pool.trace_count} (continuous batching: always 1)")
+print(f"[pool] per-stream preds: "
+      f"{[r.pred for r in sorted(results, key=lambda r: r.stream_id)]} "
+      f"(untrained weights)")
+
+# a session is just a state pytree — hop pool -> standalone and keep going
+pool2 = deployed.serve(2, backend=args.backend)
+pool2.admit("roamer")
+for t in range(2):
+    pooled = pool2.step({"roamer": frames[0, t]})["roamer"]
+state = pool2.evict("roamer")
+session = deployed.stream(batch=None, backend=args.backend)
+session.load_state(state)
+resumed = session.step(frames[0:1, 2])
+oracle = deployed.stream(batch=1, backend=args.backend)
+for t in range(3):
+    want = oracle.step(frames[0:1, t])
+assert (np.asarray(resumed) == np.asarray(want)).all()
+print("[pool] evict -> StreamState -> standalone session resume: bit-exact")
+print("serve_sensor_pool OK")

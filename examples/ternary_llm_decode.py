@@ -36,7 +36,9 @@ print(f"[decode] {cfg.name}: {packed} packed-uint8 bytes "
 prefill = jax.jit(make_prefill_step(cfg, args.prompt_len + args.tokens, cache_dtype=jnp.float32))
 decode = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
 
-prompts = jax.random.randint(jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size)
+prompts = jax.random.randint(
+    jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+)
 logits, cache = prefill(params, {"tokens": prompts})
 tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
 out = [tok]

@@ -1,0 +1,113 @@
+"""Bench regression gate: fresh smoke bench vs the committed baseline.
+
+CI's ``bench-smoke`` job regenerates the backend bench in smoke mode, then
+this script compares it against the committed baseline
+(``BENCH_backends.smoke.json`` at the repo root).  The gated metric is the
+**fused/ref speedup ratio** per (net, workload, batch) cell — wall-clock on
+shared CI runners is too noisy to gate absolutely, but the ratio of two
+backends measured in the same process on the same machine cancels the
+machine out.  A cell fails when its fresh ratio degrades more than
+``--tolerance`` (default 30%) below the baseline ratio.
+
+    python scripts/check_bench_regression.py BENCH_backends.smoke.json fresh.json
+    python scripts/check_bench_regression.py baseline.json fresh.json --tolerance 0.5
+
+Exit codes: 0 ok, 1 regression, 2 unusable inputs (missing cells/files).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def speedup_cells(payload: dict, backend: str = "fused") -> dict:
+    """{(net, workload, batch): speedup_vs_ref} for one bench JSON."""
+    cells = {}
+    for row in payload.get("results", []):
+        if row.get("backend") != backend:
+            continue
+        key = (row["net"], row["workload"], row["batch"])
+        cells[key] = float(row["speedup_vs_ref"])
+    return cells
+
+
+def compare(baseline: dict, fresh: dict, tolerance: float, backend: str = "fused"):
+    """(failures, report_lines).  Only cells present in BOTH runs gate —
+    a baseline refresh that adds nets must not fail until committed."""
+    base_cells = speedup_cells(baseline, backend)
+    fresh_cells = speedup_cells(fresh, backend)
+    shared = sorted(set(base_cells) & set(fresh_cells))
+    failures, lines = [], []
+    for key in shared:
+        base, now = base_cells[key], fresh_cells[key]
+        floor = base * (1.0 - tolerance)
+        ok = now >= floor
+        net, workload, batch = key
+        lines.append(
+            f"{net}/{workload}/b{batch}: {backend} speedup {now:.2f} "
+            f"(baseline {base:.2f}, floor {floor:.2f}) "
+            f"{'ok' if ok else 'REGRESSED'}"
+        )
+        if not ok:
+            failures.append(
+                f"{net}/{workload}/b{batch}: {backend}/ref speedup degraded "
+                f">{tolerance:.0%}: {base:.2f} -> {now:.2f}"
+            )
+    missing = sorted(set(base_cells) - set(fresh_cells))
+    extra = sorted(set(fresh_cells) - set(base_cells))
+    return failures, lines, shared, missing, extra
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("fresh", help="freshly generated bench JSON")
+    ap.add_argument("--tolerance", type=float, default=0.30,
+                    help="allowed fractional degradation of the fused/ref "
+                         "speedup ratio (default 0.30)")
+    ap.add_argument("--backend", default="fused",
+                    help="backend whose speedup-vs-ref is gated")
+    args = ap.parse_args(argv)
+
+    try:
+        baseline = json.loads(Path(args.baseline).read_text())
+        fresh = json.loads(Path(args.fresh).read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"[bench-gate] cannot read inputs: {e}", file=sys.stderr)
+        return 2
+
+    failures, lines, shared, missing, extra = compare(
+        baseline, fresh, args.tolerance, args.backend
+    )
+    for line in lines:
+        print(f"[bench-gate] {line}")
+    if missing:
+        print(f"[bench-gate] WARNING: baseline cells absent from fresh run: "
+              f"{missing}", file=sys.stderr)
+    if extra:
+        print(f"[bench-gate] note: new cells not yet in baseline: {extra}")
+    if not shared:
+        print("[bench-gate] no shared cells between baseline and fresh run — "
+              "nothing gated; refresh the committed baseline", file=sys.stderr)
+        return 2
+    if failures:
+        for f in failures:
+            print(f"[bench-gate] FAIL {f}", file=sys.stderr)
+        print(
+            "[bench-gate] interpreter-mode ratios can shift across host "
+            "generations; if this reproduces on a clean runner with no "
+            "kernel change, refresh the baseline: python "
+            "benchmarks/backend_bench.py --smoke --repeats 5  (then commit "
+            f"{args.baseline})", file=sys.stderr,
+        )
+        return 1
+    print(f"[bench-gate] {len(shared)} cells within {args.tolerance:.0%} of "
+          f"baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

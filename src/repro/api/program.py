@@ -9,6 +9,7 @@ the paper's silicon implements:
     deployed = prog.quantize(params, calib=x)   # packed 2-bit weights
     logits   = deployed.forward(x, backend="fused")    # | "pallas" | "ref" | "interpret"
     session  = deployed.stream(batch=4)         # TCN ring memory (temporal)
+    pool     = deployed.serve(pool_size=8)      # multi-sensor continuous batching
     report   = deployed.silicon_report(v=0.5)   # cycles/energy vs Table 1
 
 Execution semantics per layer kind are identical across paths; the QAT path
@@ -52,6 +53,7 @@ from repro.api import quantize as q
 from repro.api.graph import CutieGraph
 from repro.core import cutie_arch as arch
 from repro.core.tcn import (
+    StreamState,
     TCNStream,
     conv2d_undilated,
     project_weights_to_2d,
@@ -340,7 +342,16 @@ class DeployedProgram:
         fc = self.tables["fc"]
         if not jnp.issubdtype(x.dtype, jnp.floating):
             x = x.astype(jnp.float32)  # fused backend hands int8 trits over
-        return x @ (fc["t"].astype(x.dtype) * fc["scale"])
+        # Dot the raw trits FIRST, scale per class AFTER — the OPU's order
+        # (integer accumulate -> fold scale).  With ternary/dyadic inputs
+        # the x @ t reduction is integer-valued and therefore exact in
+        # float32 under ANY summation order, so the logits are identical
+        # across batch sizes and eager/jit — the serving-pool contract that
+        # slot p of a P-wide batch reproduces a lone batch-1 session
+        # bit-for-bit.  (Folding the scale into the weights before the dot
+        # breaks this: the batched gemm reassociates per shape and drifts
+        # in the last ulp.)
+        return (x @ fc["t"].astype(x.dtype)) * fc["scale"]
 
     def spatial_forward(self, x: jax.Array, backend: str = "pallas") -> jax.Array:
         """Frontend (or whole spatial net) on packed weights: [B,H,W,C] ->
@@ -448,6 +459,16 @@ class DeployedProgram:
             raise ValueError(f"{self.graph.name} has no TCN memory to stream into")
         return StreamSession(self, batch=batch, backend=backend, jit=jit)
 
+    def serve(self, pool_size: int, backend: str = "fused", **kwargs):
+        """Multi-sensor serving: a `repro.serving.SessionPool` of
+        ``pool_size`` slots over this program — one jitted fixed-batch step,
+        streams admitted/evicted mid-flight (continuous batching), optional
+        ``sharding`` of the pool axis across local devices.  See
+        `repro.serving` for the pool/scheduler API."""
+        from repro.serving import SessionPool
+
+        return SessionPool(self, pool_size, backend=backend, **kwargs)
+
     # -- silicon model -----------------------------------------------------
 
     def silicon_report(self, v: float = 0.5, hw: Optional[arch.CutieHW] = None) -> "SiliconReport":
@@ -460,6 +481,13 @@ class StreamSession:
     ``step(frame)`` returns the per-frame logits and advances the ring —
     the serving-facing analogue of `DeployedProgram.stream_step`, with the
     step function jitted once per session.
+
+    The whole session state is ONE pytree (`core.tcn.StreamState`: ring +
+    monotonic frame counter), so it moves wholesale: `export_state()` hands
+    it out, `load_state()` takes it back, and a `repro.serving.SessionPool`
+    scatters it into (or gathers it out of) a slot of the pooled `[P, T,
+    C]` state — a session can hop between standalone and pooled execution
+    with bit-identical logits.
     """
 
     def __init__(self, deployed: DeployedProgram, batch: Optional[int] = None,
@@ -469,10 +497,19 @@ class StreamSession:
         self.backend = backend
         self.batch = batch
         g = deployed.graph
-        self.state = TCNStream.create(g.tcn_steps, g.feature_channels, batch=batch)
-        self.steps_seen = 0  # monotonic; the ring cursor wraps mod tcn_steps
-        fn = lambda s, f: deployed.stream_step(s, f, backend)
+        self.state = StreamState.create(g.tcn_steps, g.feature_channels, batch=batch)
+
+        def fn(state: StreamState, frame: jax.Array):
+            logits, ring = deployed.stream_step(state.ring, frame, backend)
+            return logits, StreamState(ring=ring, steps_seen=state.steps_seen + 1)
+
         self._step = jax.jit(fn) if jit else fn
+
+    @property
+    def steps_seen(self) -> int:
+        """Frames absorbed since creation/reset; monotonic across the ring
+        cursor's wrap (it lives in the state pytree, inside the jit)."""
+        return int(self.state.steps_seen)
 
     @property
     def window_warm(self) -> bool:
@@ -481,20 +518,37 @@ class StreamSession:
 
     def step(self, frame: jax.Array) -> jax.Array:
         logits, self.state = self._step(self.state, frame)
-        self.steps_seen += 1
         return logits
 
     def reset(self) -> None:
         g = self.deployed.graph
-        self.state = TCNStream.create(g.tcn_steps, g.feature_channels, batch=self.batch)
-        self.steps_seen = 0
+        self.state = StreamState.create(g.tcn_steps, g.feature_channels, batch=self.batch)
+
+    # -- state as a first-class value -------------------------------------
+
+    def export_state(self) -> StreamState:
+        """The session's complete state pytree (share/checkpoint/admit into
+        a `SessionPool` via ``pool.admit(sid, state=...)``)."""
+        return self.state
+
+    def load_state(self, state: StreamState) -> None:
+        """Resume from an exported/evicted state.  Shape-checked against
+        this session's ring geometry."""
+        expect = self.state.ring.buf.shape
+        if state.ring.buf.shape != expect:
+            raise ValueError(
+                f"state ring shape {state.ring.buf.shape} != session {expect}"
+            )
+        self.state = state
 
 
 # ---------------------------------------------------------------------------
 # Graph -> analytical silicon model (core.cutie_arch)
 # ---------------------------------------------------------------------------
 
-def export_conv_layers(graph: CutieGraph, repeat_frontend: Optional[int] = None) -> List[arch.ConvLayer]:
+def export_conv_layers(
+    graph: CutieGraph, repeat_frontend: Optional[int] = None
+) -> List[arch.ConvLayer]:
     """Lower the graph to the cycle-accurate layer list of the silicon model.
 
     Temporal graphs count ``passes_per_inference`` frontend passes per

@@ -18,6 +18,7 @@ from repro.core.tcn import (
     unwrap_time_axis,
     receptive_field,
     TCNStream,
+    StreamState,
     stream_tcn_apply,
 )
 from repro.core import cutie_arch

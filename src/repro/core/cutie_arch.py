@@ -60,7 +60,9 @@ PAPER = dict(
 # Physical datapath peak: 96 OCUs x (3*3*96 MACs) x 2 Op/MAC per cycle.
 OPS_PER_CYCLE_PHYSICAL = 2 * 3 * 3 * 96 * 96  # = 165_888
 # The paper's peak-throughput counting convention relative to physical 2*MACs.
-KAPPA_PAPER_OPS = (PAPER["peak_tput_0v5_tops"] * 1e12 / PAPER["f_at_0v5_hz"]) / OPS_PER_CYCLE_PHYSICAL
+KAPPA_PAPER_OPS = (
+    PAPER["peak_tput_0v5_tops"] * 1e12 / PAPER["f_at_0v5_hz"]
+) / OPS_PER_CYCLE_PHYSICAL
 
 
 @dataclasses.dataclass(frozen=True)

@@ -162,7 +162,9 @@ class TCNStream:
     cursor: jax.Array  # int32 scalar — next write slot
 
     @staticmethod
-    def create(n_steps: int, channels: int, batch: Optional[int] = None, dtype=jnp.float32) -> "TCNStream":
+    def create(
+        n_steps: int, channels: int, batch: Optional[int] = None, dtype=jnp.float32
+    ) -> "TCNStream":
         shape = (n_steps, channels) if batch is None else (batch, n_steps, channels)
         return TCNStream(buf=jnp.zeros(shape, dtype), cursor=jnp.zeros((), jnp.int32))
 
@@ -182,6 +184,29 @@ class TCNStream:
         required pixel; a roll gives the same contiguous view.
         """
         return jnp.roll(self.buf, -self.cursor, axis=-2)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class StreamState:
+    """One stream's complete streaming state as a pytree: the TCN ring plus
+    a monotonic frame counter (the ring cursor alone loses the age once it
+    wraps mod T).  `repro.api.StreamSession` holds exactly this; a serving
+    pool slot is exactly this with a leading pool axis — see
+    `repro.serving.masking.gather_slot`/`scatter_slot`.  Being a pytree, it
+    jits, donates, device_puts, and scatters into pooled state wholesale."""
+
+    ring: TCNStream
+    steps_seen: jax.Array  # int32 scalar, monotonic across cursor wraps
+
+    @staticmethod
+    def create(
+        n_steps: int, channels: int, batch: Optional[int] = None, dtype=jnp.float32
+    ) -> "StreamState":
+        return StreamState(
+            ring=TCNStream.create(n_steps, channels, batch=batch, dtype=dtype),
+            steps_seen=jnp.zeros((), jnp.int32),
+        )
 
 
 def stream_tcn_apply(stream: TCNStream, tcn_fn) -> jax.Array:

@@ -113,7 +113,8 @@ class DVSEventPipeline:
     events/frame) the paper's DVS128 workload exhibits.
     """
 
-    def __init__(self, batch: int, *, steps: int = 5, hw: int = 64, n_classes: int = 12, seed: int = 0):
+    def __init__(self, batch: int, *, steps: int = 5, hw: int = 64,
+                 n_classes: int = 12, seed: int = 0):
         self.batch, self.steps, self.hw, self.n_classes = batch, steps, hw, n_classes
         self.state = PipelineState(seed=seed, step=0)
 

@@ -1,5 +1,7 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+)
 
 """Multi-pod dry-run: prove every (arch x shape x mesh) cell lowers, compiles,
 fits, and report its roofline inputs — without TPU hardware.

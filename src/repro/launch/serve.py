@@ -4,14 +4,19 @@ Two serving paths:
   * LM serving (``--arch``): prefill a batch of prompts, then decode
     autoregressively with a KV/SSM cache — the decode_32k / long_500k cells
     run exactly this step function on the production mesh.
-  * CUTIE DVS streaming (``--dvs``): the paper's autonomous mode — event
-    frames stream through the ternary CNN into the TCN ring memory, a
-    gesture label per frame.  Runs entirely through the `repro.api`
-    program pipeline: registry net -> CutieProgram -> quantize ->
-    StreamSession, with the per-frame silicon cost reported at exit.
+  * CUTIE multi-sensor streaming (``--dvs``): the paper's autonomous mode
+    scaled out — an arrival/departure simulation of many DVS sensor
+    streams continuously batched onto one `repro.serving.SessionPool`.
+    Sensors come online staggered, stream their event frames through the
+    ternary CNN into slot-masked TCN ring memory, and finished streams free
+    their slot for the next arrival without retracing the jitted step.
+    Reports frames/s, pool occupancy, and streaming accuracy against the
+    pipeline's ground-truth labels; verifies the pool against independent
+    single-stream `StreamSession`s (bit-exact) and exits non-zero on any
+    mismatch or non-finite logits — the CI ``serve-smoke`` gate.
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke --tokens 16
-    PYTHONPATH=src python -m repro.launch.serve --dvs --frames 8 --backend fused
+    PYTHONPATH=src python -m repro.launch.serve --dvs --pool 4 --frames 6 --backend fused
 
     The DVS default backend is "fused": conv+threshold(+pool) in one kernel
     launch per layer, int8 ternary activations between layers — the
@@ -21,6 +26,7 @@ Two serving paths:
 from __future__ import annotations
 
 import argparse
+import sys
 import time
 
 import jax
@@ -47,7 +53,11 @@ def serve_lm(args):
         ))
         decode = jax.jit(make_decode_step(cfg, shard=shard), donate_argnums=(2,))
 
-        batch = {"tokens": jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+        batch = {
+            "tokens": jax.random.randint(
+                key, (args.batch, args.prompt_len), 0, cfg.vocab_size
+            )
+        }
         if cfg.frontend == "vision":
             batch["frontend_embeds"] = jax.random.normal(
                 key, (args.batch, cfg.frontend_seq, cfg.d_model))
@@ -76,28 +86,115 @@ def serve_lm(args):
     return seqs
 
 
-def serve_dvs(args):
+def serve_dvs(args) -> int:
+    """Continuous-batching multi-sensor simulation over a `SessionPool`.
+
+    ``--streams`` sensors (default 2x the pool) each produce ``--frames``
+    event frames; sensor i comes online at tick i, so the pool sees
+    arrivals, departures, and slot refills mid-flight.  Exit code is the
+    health gate CI runs: non-zero on non-finite logits or any pool-vs-
+    single-session logit mismatch.
+    """
     from repro.api import get_net
     from repro.data.pipeline import DVSEventPipeline
+    from repro.serving import ContinuousBatcher, StreamRequest
 
-    prog = get_net("dvs_cnn_tcn")
+    if args.frames <= 0:
+        # nothing to stream — report an idle pool instead of crashing on
+        # unbound logits (the pre-pool serve loop's --frames 0 bug)
+        print(f"[serve-dvs] --frames {args.frames}: no frames to serve; "
+              f"pool of {args.pool} stays idle")
+        return 0
+
+    n_streams = args.streams or 2 * args.pool
+    prog = get_net(args.net)
+    g = prog.graph
     params = prog.init(jax.random.PRNGKey(args.seed))
-    pipe = DVSEventPipeline(args.batch, steps=args.frames, seed=args.seed)
+    pipe = DVSEventPipeline(
+        n_streams, steps=args.frames, hw=g.input_hw[0], seed=args.seed
+    )
     frames, labels = pipe.next_batch()
     deployed = prog.quantize(params, calib=frames)
-    session = deployed.stream(batch=args.batch, backend=args.backend)
+
+    pool = deployed.serve(
+        args.pool, backend=args.backend,
+        sharding="auto" if args.shard else None,
+    )
+    batcher = ContinuousBatcher(pool)
+    for i in range(n_streams):
+        batcher.submit(StreamRequest(
+            stream_id=f"sensor-{i}", frames=frames[i],
+            label=int(labels[i]), arrival=i,
+        ))
+
     t0 = time.time()
-    for t in range(args.frames):
-        logits = session.step(frames[:, t])
-    jax.block_until_ready(logits)
-    dt = time.time() - t0
-    print(f"[serve-dvs] {args.frames} frames x batch {args.batch} "
-          f"({args.backend}): {dt/args.frames*1e3:.0f} ms/frame; logits finite: "
-          f"{bool(np.isfinite(np.asarray(logits)).all())}")
+    results = batcher.run()
+    jax.block_until_ready(pool.state.buf)
+    wall = time.time() - t0
+    stats = batcher.stats()
+
+    finite = all(np.isfinite(r.logits).all() for r in results)
+    acc = stats["accuracy"]
+    fps = stats["frames_processed"] / wall if wall > 0 else float("nan")
+    print(f"[serve-dvs] {g.name} ({args.backend}): {n_streams} sensors x "
+          f"{args.frames} frames through a {args.pool}-slot pool "
+          f"(shard={pool.sharding is not None})")
+    print(f"[serve-dvs] {stats['frames_processed']} frames in "
+          f"{stats['ticks']} ticks, {wall:.2f} s -> {fps:.0f} frames/s host, "
+          f"mean occupancy {stats['mean_occupancy']:.2f}, "
+          f"step retraces {pool.trace_count}")
+    chance = f"untrained weights — chance is {1.0 / g.n_classes:.2f}"
+    print(f"[serve-dvs] streaming accuracy {acc:.2f} "
+          f"({chance if acc < 0.9 else 'vs ground-truth labels'}); "
+          f"logits finite: {finite}")
+
+    # the serving contract: each pooled stream == a lone StreamSession
+    mismatches = _verify_pool_vs_sessions(
+        deployed, results, frames, args.backend, check=min(args.check_streams, n_streams)
+    )
     rep = deployed.silicon_report(v=0.5)
-    print(f"[serve-dvs] CUTIE @0.5V: {rep.energy_uj:.2f} uJ/classification, "
-          f"{rep.inf_per_s * deployed.graph.passes_per_inference:.0f} frames/s")
-    return logits
+    sensor_fps = rep.inf_per_s * g.passes_per_inference
+    print(f"[serve-dvs] CUTIE @0.5V would run each sensor at "
+          f"{sensor_fps:.0f} frames/s, {rep.energy_uj:.2f} uJ/classification "
+          f"({args.pool} sensors -> {args.pool * sensor_fps:.0f} frames/s "
+          f"aggregate)")
+    if not finite:
+        print("[serve-dvs] FAIL: non-finite logits", file=sys.stderr)
+        return 1
+    if mismatches:
+        for m in mismatches:
+            print(f"[serve-dvs] FAIL: {m}", file=sys.stderr)
+        return 1
+    if len(results) != n_streams:
+        print(f"[serve-dvs] FAIL: {len(results)}/{n_streams} streams completed",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+def _verify_pool_vs_sessions(deployed, results, frames, backend, check: int):
+    """Replay the first ``check`` streams through independent batch-1
+    `StreamSession`s; pooled final logits must match bit-for-bit."""
+    mismatches = []
+    by_id = {r.stream_id: r for r in results}
+    for i in range(check):
+        sid = f"sensor-{i}"
+        if sid not in by_id:
+            mismatches.append(f"{sid}: no result")
+            continue
+        session = deployed.stream(batch=1, backend=backend)
+        for t in range(frames.shape[1]):
+            ref_logits = session.step(frames[i:i + 1, t])
+        got = by_id[sid].logits
+        want = np.asarray(ref_logits)[0]
+        if not (got == want).all():
+            mismatches.append(
+                f"{sid}: pool logits != single-session logits "
+                f"(max|diff|={np.abs(got - want).max():.3e})"
+            )
+    print(f"[serve-dvs] pool vs single-session: {check} streams replayed, "
+          f"{len(mismatches)} mismatches")
+    return mismatches
 
 
 def main(argv=None):
@@ -112,7 +209,19 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=16)
-    ap.add_argument("--frames", type=int, default=8)
+    ap.add_argument("--frames", type=int, default=8,
+                    help="dvs: event frames per sensor stream")
+    ap.add_argument("--net", default="dvs_cnn_tcn",
+                    help="dvs: registry net to serve (e.g. dvs_cnn_tcn_smoke)")
+    ap.add_argument("--pool", type=int, default=4,
+                    help="dvs: SessionPool slots (fixed jitted batch width)")
+    ap.add_argument("--streams", type=int, default=0,
+                    help="dvs: total sensor streams to serve (0 = 2x pool)")
+    ap.add_argument("--check-streams", type=int, default=2,
+                    help="dvs: streams replayed through single sessions for "
+                         "the bit-exactness gate")
+    ap.add_argument("--shard", action="store_true",
+                    help="dvs: shard the pool axis across local devices")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.dvs:
@@ -121,4 +230,5 @@ def main(argv=None):
 
 
 if __name__ == "__main__":
-    main()
+    rc = main()
+    sys.exit(rc if isinstance(rc, int) else 0)

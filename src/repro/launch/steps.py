@@ -147,7 +147,9 @@ def make_decode_step(cfg: ModelConfig, *, shard=None) -> Callable:
 # Input specs (the dry-run contract)
 # ---------------------------------------------------------------------------
 
-def input_specs(cfg: ModelConfig, shape: ShapeConfig, *, cache_dtype=jnp.bfloat16) -> Dict[str, Any]:
+def input_specs(
+    cfg: ModelConfig, shape: ShapeConfig, *, cache_dtype=jnp.bfloat16
+) -> Dict[str, Any]:
     """ShapeDtypeStruct stand-ins for every input of this cell's step.
 
     train:   {batch: {tokens, targets [, frontend_embeds, enc_embeds]}}

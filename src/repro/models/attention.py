@@ -34,15 +34,26 @@ def attn_init(key, cfg: ModelConfig, dtype=jnp.float32):
     if cfg.attn_type == "mla":
         qk_dim = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
         p = {
-            "w_dkv": linear_init(ks[1], d, cfg.kv_lora_rank + cfg.qk_rope_head_dim, quant=cfg.quant, dtype=dtype),
-            "w_uk": linear_init(ks[2], cfg.kv_lora_rank, h * cfg.qk_nope_head_dim, quant=cfg.quant, dtype=dtype),
-            "w_uv": linear_init(ks[3], cfg.kv_lora_rank, h * cfg.v_head_dim, quant=cfg.quant, dtype=dtype),
+            "w_dkv": linear_init(
+                ks[1], d, cfg.kv_lora_rank + cfg.qk_rope_head_dim,
+                quant=cfg.quant, dtype=dtype,
+            ),
+            "w_uk": linear_init(
+                ks[2], cfg.kv_lora_rank, h * cfg.qk_nope_head_dim,
+                quant=cfg.quant, dtype=dtype,
+            ),
+            "w_uv": linear_init(
+                ks[3], cfg.kv_lora_rank, h * cfg.v_head_dim,
+                quant=cfg.quant, dtype=dtype,
+            ),
             "wo": linear_init(ks[4], h * cfg.v_head_dim, d, quant=cfg.quant, dtype=dtype),
             "ckv_norm": {"g": jnp.ones((cfg.kv_lora_rank,), dtype)},
         }
         if cfg.q_lora_rank:
             p["w_dq"] = linear_init(ks[0], d, cfg.q_lora_rank, quant=cfg.quant, dtype=dtype)
-            p["w_uq"] = linear_init(ks[5], cfg.q_lora_rank, h * qk_dim, quant=cfg.quant, dtype=dtype)
+            p["w_uq"] = linear_init(
+                ks[5], cfg.q_lora_rank, h * qk_dim, quant=cfg.quant, dtype=dtype
+            )
         else:
             p["wq"] = linear_init(ks[0], d, h * qk_dim, quant=cfg.quant, dtype=dtype)
         return p
@@ -372,7 +383,9 @@ def mla_forward(
             o = o.reshape(b, 1, h * dv)
         else:
             # paper-faithful naive decode: expand K/V for the whole cache
-            k_nope = linear(p["w_uk"], ckv_c.astype(x.dtype), quant=cfg.quant).reshape(b, s_kv, h, dn)
+            k_nope = linear(
+                p["w_uk"], ckv_c.astype(x.dtype), quant=cfg.quant
+            ).reshape(b, s_kv, h, dn)
             vv = linear(p["w_uv"], ckv_c.astype(x.dtype), quant=cfg.quant).reshape(b, s_kv, h, dv)
             kr = jnp.broadcast_to(kr_c.astype(x.dtype)[:, :, None, :], (b, s_kv, h, dr))
             kk = jnp.concatenate([k_nope, kr], axis=-1)
@@ -400,8 +413,12 @@ def mla_forward(
         # v_head_dim may differ from qk dim; full_attention returned v dims
         o = o.reshape(b, s, h * dv)
         if cache is not None:
-            ckv_c = jax.lax.dynamic_update_slice(cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0))
-            kr_c = jax.lax.dynamic_update_slice(cache["krope"], k_rope.astype(cache["krope"].dtype), (0, 0, 0))
+            ckv_c = jax.lax.dynamic_update_slice(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), (0, 0, 0)
+            )
+            kr_c = jax.lax.dynamic_update_slice(
+                cache["krope"], k_rope.astype(cache["krope"].dtype), (0, 0, 0)
+            )
             new_cache = {"ckv": ckv_c, "krope": kr_c}
     out = linear(p["wo"], o, quant=cfg.quant)
     return out, new_cache

@@ -177,7 +177,12 @@ class ModelConfig:
             )
             n_attn += int(is_attn)
             n_ssm += int(not is_attn)
-            if self.is_moe and i >= self.first_dense_layers and i % self.moe_layer_period == (self.moe_layer_period - 1 if self.moe_layer_period > 1 else 0):
+            if (
+                self.is_moe
+                and i >= self.first_dense_layers
+                and i % self.moe_layer_period
+                == (self.moe_layer_period - 1 if self.moe_layer_period > 1 else 0)
+            ):
                 n_moe_layers += 1
             else:
                 n_dense_ffn += 1
@@ -205,7 +210,8 @@ class ModelConfig:
             1
             for i in range(self.n_layers)
             if i >= self.first_dense_layers
-            and i % self.moe_layer_period == (self.moe_layer_period - 1 if self.moe_layer_period > 1 else 0)
+            and i % self.moe_layer_period
+            == (self.moe_layer_period - 1 if self.moe_layer_period > 1 else 0)
         )
         return self.n_params() - n_moe_layers * inactive
 

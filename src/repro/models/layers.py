@@ -95,7 +95,9 @@ def rope_freqs(head_dim: int, theta: float, *, partial: float = 1.0) -> jax.Arra
     return 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
 
 
-def apply_rope(x: jax.Array, positions: jax.Array, theta: float, *, partial: float = 1.0) -> jax.Array:
+def apply_rope(
+    x: jax.Array, positions: jax.Array, theta: float, *, partial: float = 1.0
+) -> jax.Array:
     """x: [B, S, H, hd]; positions: [B, S] int32."""
     hd = x.shape[-1]
     inv = rope_freqs(hd, theta, partial=partial)

@@ -93,7 +93,9 @@ def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array,
 
 def _conv_step(hist: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
     """Decode-time conv: hist [B, K, C] (oldest..newest) -> [B, C]."""
-    return jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32), w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return jnp.einsum(
+        "bkc,kc->bc", hist.astype(jnp.float32), w.astype(jnp.float32)
+    ) + b.astype(jnp.float32)
 
 
 def _ssd_chunked(x, dt, a_log, bmat, cmat, h0, chunk: int):
@@ -194,7 +196,9 @@ def mamba_forward(
         y = y.reshape(bsz, 1, di)
         new_state = {"h": h_new, "conv_x": hx[:, 1:], "conv_B": hb[:, 1:], "conv_C": hc[:, 1:]}
     else:
-        xs = jax.nn.silu(_causal_depthwise_conv(xin, p["conv_x_w"], p["conv_x_b"], cfg.use_tcn_mapping))
+        xs = jax.nn.silu(
+            _causal_depthwise_conv(xin, p["conv_x_w"], p["conv_x_b"], cfg.use_tcn_mapping)
+        )
         bm = jax.nn.silu(_causal_depthwise_conv(bin_, p["conv_B_w"], p["conv_B_b"]))
         cm = jax.nn.silu(_causal_depthwise_conv(cin, p["conv_C_w"], p["conv_C_b"]))
         xs = xs.reshape(bsz, t, nh, hp)
@@ -213,7 +217,9 @@ def mamba_forward(
 
             def tail(v, cdtype):
                 pad = jnp.zeros((bsz, max(k - 1 - t, 0), v.shape[-1]), cdtype)
-                return jnp.concatenate([pad, v[:, -(k - 1):, :].astype(cdtype)], axis=1)[:, -(k - 1):, :]
+                return jnp.concatenate(
+                    [pad, v[:, -(k - 1):, :].astype(cdtype)], axis=1
+                )[:, -(k - 1):, :]
 
             new_state = {
                 "h": h_fin,
@@ -233,7 +239,9 @@ def mamba_forward(
 def mamba_state_spec(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
     k = cfg.ssm_conv
     return {
-        "h": jax.ShapeDtypeStruct((batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        "h": jax.ShapeDtypeStruct(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32
+        ),
         "conv_x": jax.ShapeDtypeStruct((batch, k - 1, cfg.d_inner), dtype),
         "conv_B": jax.ShapeDtypeStruct((batch, k - 1, cfg.ssm_state), dtype),
         "conv_C": jax.ShapeDtypeStruct((batch, k - 1, cfg.ssm_state), dtype),

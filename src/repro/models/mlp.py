@@ -13,11 +13,17 @@ def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None, dtype=jnp.float32):
     ks = jax.random.split(key, 3)
     gated = cfg.mlp_type in ("swiglu", "geglu")
     p = {
-        "w_up": linear_init(ks[1], cfg.d_model, d_ff, bias=cfg.mlp_bias, quant=cfg.quant, dtype=dtype),
-        "w_down": linear_init(ks[2], d_ff, cfg.d_model, bias=cfg.mlp_bias, quant=cfg.quant, dtype=dtype),
+        "w_up": linear_init(
+            ks[1], cfg.d_model, d_ff, bias=cfg.mlp_bias, quant=cfg.quant, dtype=dtype
+        ),
+        "w_down": linear_init(
+            ks[2], d_ff, cfg.d_model, bias=cfg.mlp_bias, quant=cfg.quant, dtype=dtype
+        ),
     }
     if gated:
-        p["w_gate"] = linear_init(ks[0], cfg.d_model, d_ff, bias=cfg.mlp_bias, quant=cfg.quant, dtype=dtype)
+        p["w_gate"] = linear_init(
+            ks[0], cfg.d_model, d_ff, bias=cfg.mlp_bias, quant=cfg.quant, dtype=dtype
+        )
     return p
 
 

@@ -259,7 +259,9 @@ def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
     for i, seg in enumerate(segs):
         params[f"seg{i}"] = _segment_init(ks[1 + i], cfg, seg, dtype)
     if not cfg.tie_embeddings:
-        params["lm_head"] = linear_init(ks[-1], cfg.d_model, cfg.vocab_size, quant=cfg.quant, dtype=dtype)
+        params["lm_head"] = linear_init(
+            ks[-1], cfg.d_model, cfg.vocab_size, quant=cfg.quant, dtype=dtype
+        )
     if cfg.is_encdec:
         esegs = encoder_segments(cfg)
         params["enc"] = {
@@ -383,7 +385,11 @@ def forward(
     if new_cache is not None:
         new_cache["len"] = (cache["len"] + 1) if mode == "decode" else jnp.asarray(seq, jnp.int32)
         if cfg.is_encdec:
-            new_cache["enc_out"] = enc_out.astype(cache["enc_out"].dtype) if mode != "decode" else cache["enc_out"]
+            new_cache["enc_out"] = (
+                enc_out.astype(cache["enc_out"].dtype)
+                if mode != "decode"
+                else cache["enc_out"]
+            )
 
     return ModelOutput(logits=logits, cache=new_cache, aux_loss=aux_total)
 
@@ -420,7 +426,9 @@ def chunked_ce_loss(hidden, targets, head_w, *, softcap=0.0, chunk: int = 512):
         return (carry[0] + nll, carry[1] + nt), None
 
     body = jax.checkpoint(_body, prevent_cse=False)
-    (nll, ntok), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (hc, tc))
+    (nll, ntok), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (hc, tc)
+    )
     return nll / jnp.maximum(ntok, 1), ntok
 
 

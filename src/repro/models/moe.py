@@ -46,7 +46,9 @@ def moe_init(key, cfg: ModelConfig, dtype=jnp.float32):
         p["shared_up"] = linear_init(ks[4], d, fs, quant=cfg.quant, dtype=dtype)
         p["shared_down"] = linear_init(ks[5], fs, d, quant=cfg.quant, dtype=dtype)
         if gated:
-            p["shared_gate"] = linear_init(jax.random.fold_in(ks[4], 1), d, fs, quant=cfg.quant, dtype=dtype)
+            p["shared_gate"] = linear_init(
+                jax.random.fold_in(ks[4], 1), d, fs, quant=cfg.quant, dtype=dtype
+            )
     return p
 
 

@@ -1,0 +1,39 @@
+"""`repro.serving` — many sensor streams on one fixed-shape jitted batch.
+
+The serving story for the paper's autonomous mode: a `SessionPool`
+multiplexes independent DVS streams onto one jitted `stream_step` with
+slot-masked ring state and per-slot cursors (continuous batching — no
+retrace on admit/evict), and `ContinuousBatcher` drives arrivals and
+departures over it.  Entry point: `DeployedProgram.serve(pool_size,
+backend)`.
+
+Layering: `masking` (pure state algebra) <- `pool` (mechanism) <-
+`scheduler` (policy).  `repro.api` stays importable without this package;
+this package imports `repro.api.program` only inside `SessionPool` for the
+backend check.
+"""
+
+from repro.serving.masking import (
+    PoolState,
+    clear_slot,
+    gather_slot,
+    masked_push,
+    ordered_windows,
+    scatter_slot,
+)
+from repro.serving.pool import PoolFullError, SessionPool
+from repro.serving.scheduler import ContinuousBatcher, StreamRequest, StreamResult
+
+__all__ = [
+    "PoolState",
+    "clear_slot",
+    "gather_slot",
+    "masked_push",
+    "ordered_windows",
+    "scatter_slot",
+    "PoolFullError",
+    "SessionPool",
+    "ContinuousBatcher",
+    "StreamRequest",
+    "StreamResult",
+]

@@ -183,6 +183,54 @@ class TestStreaming:
         session.reset()
         assert session.steps_seen == 0 and not session.window_warm
 
+    def test_reset_replays_identically(self):
+        """reset() must restore the exact initial state: replaying the same
+        clip after a reset reproduces the first pass bit-for-bit, and the
+        warm-window flag follows steps_seen across the reset."""
+        g = api.CutieGraph(
+            name="tiny_tcn_reset", input_hw=(4, 4), input_ch=2, n_classes=3,
+            tcn_steps=3,
+            layers=(api.conv2d(2, 4), api.global_pool(),
+                    api.tcn(4, 4, dilation=1), api.last_step(), api.fc(4, 3)),
+        )
+        prog = CutieProgram(g)
+        deployed = prog.quantize(prog.init(jax.random.PRNGKey(2)))
+        frames = (jax.random.uniform(jax.random.PRNGKey(3), (1, 4, 4, 4, 2)) < 0.3
+                  ).astype(jnp.float32)
+        session = deployed.stream(batch=1, backend="ref")
+        first = [np.asarray(session.step(frames[:, t])) for t in range(4)]
+        assert session.window_warm
+        session.reset()
+        assert session.steps_seen == 0 and not session.window_warm
+        second = [np.asarray(session.step(frames[:, t])) for t in range(4)]
+        for a, b in zip(first, second):
+            np.testing.assert_array_equal(a, b)
+
+    def test_export_load_state_round_trip(self):
+        """export_state/load_state hand the session's pytree around without
+        perturbing the stream (and shape-check foreign states)."""
+        g = api.CutieGraph(
+            name="tiny_tcn_state", input_hw=(4, 4), input_ch=2, n_classes=3,
+            tcn_steps=3,
+            layers=(api.conv2d(2, 4), api.global_pool(),
+                    api.tcn(4, 4, dilation=1), api.last_step(), api.fc(4, 3)),
+        )
+        prog = CutieProgram(g)
+        deployed = prog.quantize(prog.init(jax.random.PRNGKey(4)))
+        frames = (jax.random.uniform(jax.random.PRNGKey(5), (1, 4, 4, 4, 2)) < 0.3
+                  ).astype(jnp.float32)
+        a = deployed.stream(batch=1, backend="ref")
+        b = deployed.stream(batch=1, backend="ref")
+        a.step(frames[:, 0]); a.step(frames[:, 1])
+        b.load_state(a.export_state())
+        assert b.steps_seen == 2
+        np.testing.assert_array_equal(
+            np.asarray(a.step(frames[:, 2])), np.asarray(b.step(frames[:, 2]))
+        )
+        wrong = deployed.stream(batch=2, backend="ref")
+        with pytest.raises(ValueError, match="ring shape"):
+            b.load_state(wrong.export_state())
+
     def test_stream_on_spatial_net_raises(self, cifar_prog):
         p = cifar_prog.init(jax.random.PRNGKey(6))
         with pytest.raises(ValueError):

@@ -71,7 +71,10 @@ class TestTernaryGradCompression:
         cg, res2 = compress_with_feedback(g, res)
         gh = decompress(cg, g)
         # ternary approximation correlates strongly with the true gradient
-        corr = float(jnp.sum(gh["w"] * g["w"]) / (jnp.linalg.norm(gh["w"]) * jnp.linalg.norm(g["w"])))
+        corr = float(
+            jnp.sum(gh["w"] * g["w"])
+            / (jnp.linalg.norm(gh["w"]) * jnp.linalg.norm(g["w"]))
+        )
         assert corr > 0.7
         # mass conservation: g = approx + residual (exactly)
         np.testing.assert_allclose(
