@@ -3,7 +3,8 @@ first-class LM feature (BitNet-style: every projection through the TWN STE).
 
 Runs a reduced config by default so the example completes on CPU; pass
 --full-100m for a ~100M-param gemma-family model (same code path the
-production mesh uses — see launch/train.py for checkpoints/FT).
+production mesh uses — see launch/train_lm.py for checkpoints/FT; the
+paper's own QAT loop is `repro.train`, driven by launch/train.py).
 
     PYTHONPATH=src python examples/train_ternary_lm.py [--steps 100] [--full-100m]
 """

@@ -1,0 +1,76 @@
+"""Docs link check: fail on dead relative links in README/docs markdown.
+
+Scans the given markdown files (default: README.md and docs/*.md) for
+inline links/images ``[text](target)`` and verifies every *relative* target
+exists in the repo.  External schemes (http/https/mailto) and pure
+in-page anchors (#...) are skipped; a ``path#anchor`` target checks only the
+path part.  Runs with no dependencies, so CI's lint job can gate on it
+before anything heavy installs.
+
+    python scripts/check_doc_links.py            # README.md + docs/*.md
+    python scripts/check_doc_links.py docs/*.md some/other.md
+
+Exit codes: 0 ok, 1 dead links found.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+# inline markdown links/images; deliberately simple — our docs don't use
+# reference-style links or angle-bracket targets
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+
+
+def iter_links(md_path: Path):
+    text = md_path.read_text()
+    # strip fenced code blocks — link-looking text in examples is not a link
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for m in _LINK.finditer(text):
+        yield m.group(1)
+
+
+def check_file(md_path: Path) -> list:
+    dead = []
+    for target in iter_links(md_path):
+        if target.startswith(_SKIP_SCHEMES) or target.startswith("#"):
+            continue
+        path_part = target.split("#", 1)[0]
+        if not path_part:
+            continue
+        resolved = (md_path.parent / path_part).resolve()
+        if not resolved.exists():
+            dead.append(f"{md_path.relative_to(REPO_ROOT)}: dead link -> {target}")
+    return dead
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv:
+        files = [Path(a) for a in argv]
+    else:
+        files = [REPO_ROOT / "README.md", *sorted((REPO_ROOT / "docs").glob("*.md"))]
+    missing = [str(f) for f in files if not f.exists()]
+    if missing:
+        print(f"[doc-links] no such file(s): {', '.join(missing)}", file=sys.stderr)
+        return 1
+    dead = []
+    n_links = 0
+    for f in files:
+        links = [t for t in iter_links(f)]
+        n_links += len(links)
+        dead += check_file(f)
+    print(f"[doc-links] checked {len(files)} files, {n_links} links")
+    if dead:
+        for d in dead:
+            print(f"[doc-links] FAIL {d}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,6 +15,10 @@ Submodules:
     program   CutieProgram / DeployedProgram / StreamSession / SiliconReport
     registry  register_net / get_net, seeded with the paper's networks
 
+Training these programs is `repro.train` (STE QAT + schedules + the
+qat-vs-deployed gap eval); serving many streams is `repro.serving`.  The
+full dataflow is drawn in docs/architecture.md.
+
 `kernels/ops.py` imports `repro.api.quantize`, and `api.program` imports the
 kernels — so program/registry symbols resolve lazily (PEP 562) to keep the
 package import-cycle-free.

@@ -51,30 +51,42 @@ class LayerSpec:
 
 
 def conv2d(c_in: int, c_out: int, kernel: Tuple[int, int] = (3, 3)) -> LayerSpec:
+    """SAME ternary 2-D convolution — the OCU array's native op."""
     return LayerSpec(kind="conv2d", c_in=c_in, c_out=c_out, kernel=kernel)
 
 
 def pool(window: int = 2) -> LayerSpec:
+    """Max pool, window == stride — the silicon's inter-layer pooling unit
+    (a pool directly after a conv2d is sunk into the fused kernel epilogue,
+    see `CutieGraph.conv_pool_plan`)."""
     return LayerSpec(kind="pool", window=window)
 
 
 def global_pool() -> LayerSpec:
+    """Spatial global average: [B,H,W,C] -> [B,C] (the DVS frontend's
+    feature-vector reduction before the TCN ring)."""
     return LayerSpec(kind="global_pool")
 
 
 def flatten() -> LayerSpec:
+    """[B,H,W,C] -> [B, H*W*C] (the CIFAR head's layout change)."""
     return LayerSpec(kind="flatten")
 
 
 def tcn(c_in: int, c_out: int, dilation: int, taps: int = 3) -> LayerSpec:
+    """Dilated causal 1-D conv, executed through the paper's §4 mapping on
+    the same undilated 2-D engine (``taps`` must fit the kernel height)."""
     return LayerSpec(kind="tcn", c_in=c_in, c_out=c_out, dilation=dilation, taps=taps)
 
 
 def last_step() -> LayerSpec:
+    """Take the newest time step of a [B,T,C] sequence (TCN head -> FC)."""
     return LayerSpec(kind="last_step")
 
 
 def fc(c_in: int, c_out: int) -> LayerSpec:
+    """Ternary-weight classifier matmul (the OPU: integer accumulate, then
+    per-class scale)."""
     return LayerSpec(kind="fc", c_in=c_in, c_out=c_out)
 
 

@@ -60,7 +60,7 @@ from repro.core.tcn import (
     unwrap_time_axis,
     wrap_time_axis,
 )
-from repro.core.ternary import ste_ternary_acts, ste_ternary_weights
+from repro.core.ternary import clamp_threshold, ste_ternary_acts, ste_ternary_weights
 from repro.kernels.ops import ternary_conv2d
 from repro.kernels.ref import ternary_conv2d_ref
 
@@ -146,10 +146,18 @@ class CutieProgram:
 
     # -- parameters --------------------------------------------------------
 
-    def init(self, key: jax.Array) -> Dict:
+    def init(self, key: jax.Array, learn_thresholds: bool = False) -> Dict:
         """Kaiming-style float params, grouped by kind:
         {"conv": [{"w"}...], "tcn": [{"w"}...], "fc": {"w"}} (keys only for
-        kinds the graph contains — layout shared with the legacy model)."""
+        kinds the graph contains — layout shared with the legacy model).
+
+        ``learn_thresholds=True`` adds a ``"thresh"`` group — one trainable
+        scalar activation threshold per conv/tcn layer, initialized at the
+        graph's ``act_threshold``.  The QAT forward reads them (clamped via
+        `core.ternary.clamp_threshold`) instead of the static threshold and
+        the STE threshold gradient makes them trainable; ``quantize()``
+        folds the trained values into the packed deploy tables
+        (`api.quantize.resolve_deploy_thresholds`)."""
         g = self.graph
         convs = [l for l in g.layers if l.kind == "conv2d"]
         tcns = [l for l in g.layers if l.kind == "tcn"]
@@ -182,22 +190,42 @@ class CutieProgram:
         if fcs:
             (l,) = fcs
             p["fc"] = {"w": jax.random.normal(k_fc, (l.c_in, l.c_out)) * 0.05}
+        if learn_thresholds:
+            # one DISTINCT buffer per layer (a shared one breaks donation)
+            t0 = lambda: jnp.full((), self.graph.act_threshold, jnp.float32)
+            p["thresh"] = {}
+            if convs:
+                p["thresh"]["conv"] = [t0() for _ in convs]
+            if tcns:
+                p["thresh"]["tcn"] = [t0() for _ in tcns]
         return p
 
     # -- QAT interpreter ---------------------------------------------------
 
+    def _qat_threshold(self, params: Dict, kind: str, idx: int):
+        """The activation threshold layer ``idx`` of ``kind`` trains with:
+        the clamped learned scalar when params carry one, else the graph's
+        static ``act_threshold``."""
+        th = params.get("thresh")
+        if th is None or kind not in th:
+            return self.graph.act_threshold
+        return clamp_threshold(th[kind][idx])
+
     def spatial_forward_qat(
-        self, params: Dict, x: jax.Array, _record: Optional[List] = None
+        self, params: Dict, x: jax.Array, _record: Optional[List] = None,
+        nu: Optional[float] = None,
     ) -> jax.Array:
         """The 2-D frontend on [B, H, W, C_in] — per frame for temporal
-        graphs, the whole net (including fc) for spatial ones."""
+        graphs, the whole net (including fc) for spatial ones.  ``nu``
+        overrides the graph's TWN threshold factor (static per trace — the
+        train loop's nu schedules are piecewise-constant for this reason)."""
         g = self.graph
+        nu = g.weight_nu if nu is None else nu
         ci = 0
         for l in g.spatial_layers:
             if l.kind == "conv2d":
                 axis = (0, 1, 2) if g.qat_per_channel else None
-                wq = ste_ternary_weights(params["conv"][ci]["w"], g.weight_nu, axis)
-                ci += 1
+                wq = ste_ternary_weights(params["conv"][ci]["w"], nu, axis)
                 y = jax.lax.conv_general_dilated(
                     x, wq, (1, 1), "SAME",
                     dimension_numbers=("NHWC", "HWIO", "NHWC"),
@@ -205,7 +233,10 @@ class CutieProgram:
                 sd = _bn_sd(y)
                 if _record is not None:
                     _record.append(sd)
-                x = ste_ternary_acts(y / (sd + _BN_EPS), g.act_threshold)
+                x = ste_ternary_acts(
+                    y / (sd + _BN_EPS), self._qat_threshold(params, "conv", ci)
+                )
+                ci += 1
             elif l.kind == "pool":
                 x = _pool(x, l.window)
             elif l.kind == "global_pool":
@@ -213,54 +244,63 @@ class CutieProgram:
             elif l.kind == "flatten":
                 x = x.reshape(x.shape[0], -1)
             elif l.kind == "fc":
-                x = x @ ste_ternary_weights(params["fc"]["w"], g.weight_nu,
+                x = x @ ste_ternary_weights(params["fc"]["w"], nu,
                                             0 if g.qat_per_channel else None)
         return x
 
     def temporal_forward_qat(
-        self, params: Dict, feats: jax.Array, _record: Optional[List] = None
+        self, params: Dict, feats: jax.Array, _record: Optional[List] = None,
+        nu: Optional[float] = None,
     ) -> jax.Array:
         """TCN head + classifier over the ordered window [B, T, C].  Every
         dilated layer runs through the §4 wrap -> undilated-2-D-conv ->
         unwrap mapping — the exact schedule the silicon executes."""
         g = self.graph
+        nu = g.weight_nu if nu is None else nu
         x = feats
         ti = 0
         for l in g.temporal_layers:
             if l.kind == "tcn":
                 axis = (0, 1) if g.qat_per_channel else None
-                wq = ste_ternary_weights(params["tcn"][ti]["w"], g.weight_nu, axis)
-                ti += 1
+                wq = ste_ternary_weights(params["tcn"][ti]["w"], nu, axis)
                 z = wrap_time_axis(x, l.dilation)
                 y2 = conv2d_undilated(z, project_weights_to_2d(wq, kh=l.kernel[0], kw=l.kernel[1]))
                 y = unwrap_time_axis(y2, x.shape[1])
                 sd = _bn_sd(y)
                 if _record is not None:
                     _record.append(sd)
-                x = ste_ternary_acts(y / (sd + _BN_EPS), g.act_threshold)
+                x = ste_ternary_acts(
+                    y / (sd + _BN_EPS), self._qat_threshold(params, "tcn", ti)
+                )
+                ti += 1
             elif l.kind == "last_step":
                 x = x[:, -1, :]
             elif l.kind == "fc":
-                x = x @ ste_ternary_weights(params["fc"]["w"], g.weight_nu,
+                x = x @ ste_ternary_weights(params["fc"]["w"], nu,
                                             0 if g.qat_per_channel else None)
         return x
 
-    def forward_qat(self, params: Dict, x: jax.Array) -> jax.Array:
+    def forward_qat(
+        self, params: Dict, x: jax.Array, nu: Optional[float] = None
+    ) -> jax.Array:
         """Spatial graphs: [B, H, W, C] -> logits.  Temporal graphs:
         frames [B, T, H, W, C] -> logits over exactly what the ring memory
         would hold: the last tcn_steps frames, zero-padded on the left when
         the clip is shorter."""
         g = self.graph
         if not g.is_temporal:
-            return self.spatial_forward_qat(params, x)
+            return self.spatial_forward_qat(params, x, nu=nu)
         feats = jax.vmap(
-            lambda f: self.spatial_forward_qat(params, f), in_axes=1, out_axes=1
+            lambda f: self.spatial_forward_qat(params, f, nu=nu), in_axes=1, out_axes=1
         )(x)
-        return self.temporal_forward_qat(params, _ring_window(feats, g.tcn_steps))
+        return self.temporal_forward_qat(params, _ring_window(feats, g.tcn_steps), nu=nu)
 
     # -- quantization ------------------------------------------------------
 
-    def quantize(self, params: Dict, calib: Optional[jax.Array] = None) -> "DeployedProgram":
+    def quantize(
+        self, params: Dict, calib: Optional[jax.Array] = None,
+        nu: Optional[float] = None,
+    ) -> "DeployedProgram":
         """QAT params -> packed 2-bit deploy tables (one quantize->pad->pack
         path for every layer kind: repro.api.quantize).
 
@@ -268,44 +308,60 @@ class CutieProgram:
         once recording each layer's BN std, which deployment folds into the
         per-OCU scale — the silicon's offline BN/threshold folding.  Without
         it, a 1/sqrt(fan-in) normalization keeps accumulations in range.
+
+        ``nu`` overrides the graph's TWN threshold factor — pass the final
+        value of a scheduled-nu training run so packing quantizes on the
+        grid the params were trained for (repro.train passes this).
+
+        Learned per-layer thresholds (``init(learn_thresholds=True)``) are
+        clamped and folded into each table entry's ``"threshold"`` — the
+        fused backend's static epilogue constant.
         """
         g = self.graph
+        nu = g.weight_nu if nu is None else nu
         tables: Dict = {"conv": [], "tcn": [], "fc": {}}
         # Per-layer epilogue metadata rides with the packed weights so the
-        # deploy tables are self-describing for the fused backend (and ready
-        # for per-layer learned thresholds — ROADMAP quantization item).
+        # deploy tables are self-describing for the fused backend; the
+        # threshold is the learned per-layer value when the params carry one
+        # (ROADMAP quantization item), else the graph's static one.
+        thresholds = q.resolve_deploy_thresholds(g, params)
         pool_plan = g.conv_pool_plan()
         for li, lp in enumerate(params.get("conv", [])):
-            packed, scale = q.quantize_pack_conv_weights(lp["w"], nu=g.weight_nu)
+            packed, scale = q.quantize_pack_conv_weights(lp["w"], nu=nu)
             tables["conv"].append({
                 "packed": packed, "scale": scale,
-                "threshold": g.act_threshold, "pool": pool_plan[li],
+                "threshold": thresholds["conv"][li], "pool": pool_plan[li],
             })
         tcn_specs = [l for l in g.layers if l.kind == "tcn"]
-        for lp, l in zip(params.get("tcn", []), tcn_specs):
+        for ti, (lp, l) in enumerate(zip(params.get("tcn", []), tcn_specs)):
             packed, scale = q.quantize_pack_tcn_weights(
-                lp["w"], nu=g.weight_nu, kh=l.kernel[0], kw=l.kernel[1]
+                lp["w"], nu=nu, kh=l.kernel[0], kw=l.kernel[1]
             )
             tables["tcn"].append({
                 "packed": packed, "scale": scale, "dilation": l.dilation,
-                "threshold": g.act_threshold,
+                "threshold": thresholds["tcn"][ti],
             })
         if "fc" in params:
-            t, a = q.ternary_quantize_weights(params["fc"]["w"], nu=g.weight_nu, axis=0)
+            t, a = q.ternary_quantize_weights(params["fc"]["w"], nu=nu, axis=0)
             tables["fc"] = {"t": t, "scale": a.reshape(-1)}
         if calib is not None:
             spatial_rec: List = []
             temporal_rec: List = []
             if g.is_temporal:
-                # pooled statistics over all frames, then over the window
+                # pooled statistics over all frames, then over the window;
+                # the same nu as the packed tables — folded scales must
+                # match the deployed weight grid
                 frames = calib.reshape(-1, *calib.shape[2:])
-                feats = self.spatial_forward_qat(params, frames, _record=spatial_rec)
+                feats = self.spatial_forward_qat(
+                    params, frames, _record=spatial_rec, nu=nu
+                )
                 window = feats.reshape(calib.shape[0], calib.shape[1], -1)
                 self.temporal_forward_qat(
-                    params, _ring_window(window, g.tcn_steps), _record=temporal_rec
+                    params, _ring_window(window, g.tcn_steps),
+                    _record=temporal_rec, nu=nu,
                 )
             else:
-                self.spatial_forward_qat(params, calib, _record=spatial_rec)
+                self.spatial_forward_qat(params, calib, _record=spatial_rec, nu=nu)
             for entry, sd in zip(tables["conv"], spatial_rec):
                 entry["bn_sd"] = sd
             for entry, sd in zip(tables["tcn"], temporal_rec):
@@ -315,6 +371,8 @@ class CutieProgram:
     # -- silicon model -----------------------------------------------------
 
     def silicon_report(self, v: float = 0.5, hw: Optional[arch.CutieHW] = None) -> "SiliconReport":
+        """Analytical cycles/energy for this graph at supply ``v`` — see
+        module-level `silicon_report` (the Table-1 loop)."""
         return silicon_report(self.graph, v=v, hw=hw)
 
 
@@ -378,7 +436,7 @@ class DeployedProgram:
                     fused_pools += 1 if pool else 0
                 else:
                     y = _dispatch_conv(x, entry["packed"], eff, backend)
-                    x = _ternarize(y, g.act_threshold)
+                    x = _ternarize(y, entry.get("threshold", g.act_threshold))
             elif l.kind == "pool":
                 if fused_pools:
                     fused_pools -= 1
@@ -413,7 +471,7 @@ class DeployedProgram:
             else:
                 y2 = _dispatch_conv(zp, entry["packed"], eff, backend)[:, : z.shape[1]]
                 y = unwrap_time_axis(y2, x.shape[1])
-                x = _ternarize(y, g.act_threshold)
+                x = _ternarize(y, entry.get("threshold", g.act_threshold))
         for l in g.temporal_layers:
             if l.kind == "last_step":
                 x = x[:, -1, :]
@@ -455,6 +513,13 @@ class DeployedProgram:
     def stream(
         self, batch: Optional[int] = None, backend: str = "pallas", jit: bool = True
     ) -> "StreamSession":
+        """Open a stateful streaming session over this program's TCN ring
+        (temporal graphs only): ``session.step(frame)`` per sensor frame.
+
+            session = deployed.stream(batch=4, backend="fused")
+            for frame in frames:
+                logits = session.step(frame)     # one label per frame
+        """
         if not self.graph.is_temporal:
             raise ValueError(f"{self.graph.name} has no TCN memory to stream into")
         return StreamSession(self, batch=batch, backend=backend, jit=jit)
@@ -472,6 +537,8 @@ class DeployedProgram:
     # -- silicon model -----------------------------------------------------
 
     def silicon_report(self, v: float = 0.5, hw: Optional[arch.CutieHW] = None) -> "SiliconReport":
+        """Analytical cycles/energy for the deployed graph at supply ``v``
+        — see module-level `silicon_report` (the Table-1 loop)."""
         return silicon_report(self.graph, v=v, hw=hw)
 
 
@@ -517,10 +584,13 @@ class StreamSession:
         return self.steps_seen >= self.deployed.graph.tcn_steps
 
     def step(self, frame: jax.Array) -> jax.Array:
+        """Absorb one sensor frame ([H,W,C], or [B,H,W,C] for batched
+        sessions) and return the per-frame logits; the ring advances."""
         logits, self.state = self._step(self.state, frame)
         return logits
 
     def reset(self) -> None:
+        """Forget all history: fresh zero ring, frame counter back to 0."""
         g = self.deployed.graph
         self.state = StreamState.create(g.tcn_steps, g.feature_channels, batch=self.batch)
 
@@ -620,6 +690,7 @@ class SiliconReport:
         return self.ideal.peak_layer_eff_topsw_paper
 
     def summary(self) -> str:
+        """Human-readable report block (the launchers print this)."""
         lines = [
             f"[{self.graph_name} @ {self.v:.2f} V]",
             f"  peak efficiency : {self.peak_eff_topsw:8.0f} TOp/s/W",

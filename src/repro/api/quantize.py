@@ -19,9 +19,37 @@ import jax.numpy as jnp
 from repro.core.tcn import project_weights_to_2d
 from repro.core.ternary import (
     TERNARY_NU_DEFAULT,
+    clamp_threshold,
     pack_ternary,
     ternary_quantize_weights,
 )
+
+
+def resolve_deploy_thresholds(graph, params) -> dict:
+    """Per-layer activation thresholds for the deploy tables.
+
+    When the param pytree carries a ``"thresh"`` group (``CutieProgram.init``
+    with ``learn_thresholds=True``, trained through the STE threshold
+    gradient in `core.ternary.ste_ternary_acts`), each learned scalar is
+    clamped exactly as the QAT forward clamps it and materialized as a
+    Python float — the Pallas fused kernel takes the threshold as a *static*
+    epilogue argument, the silicon analogue being the per-layer comparator
+    constants programmed at network load time.  Without the group, every
+    layer falls back to the graph's static ``act_threshold``.
+
+    Returns ``{"conv": [t...], "tcn": [t...]}`` with one float per
+    weight-carrying layer of that kind, in layer order.
+    """
+    n_conv = sum(l.kind == "conv2d" for l in graph.layers)
+    n_tcn = sum(l.kind == "tcn" for l in graph.layers)
+    th = params.get("thresh") if hasattr(params, "get") else None
+    if th is None:
+        return {"conv": [graph.act_threshold] * n_conv,
+                "tcn": [graph.act_threshold] * n_tcn}
+    return {
+        "conv": [float(clamp_threshold(t)) for t in th.get("conv", [])],
+        "tcn": [float(clamp_threshold(t)) for t in th.get("tcn", [])],
+    }
 
 
 def quantize_pad_pack(

@@ -61,12 +61,15 @@ def get_net(name: str) -> CutieProgram:
 
 
 def get_graph(name: str) -> CutieGraph:
+    """The registered graph itself (un-compiled) — for `dataclasses.replace`
+    tweaks (e.g. `qat_per_channel=True`) before building a `CutieProgram`."""
     if name not in _REGISTRY:
         raise KeyError(f"unknown net {name!r}; registered: {sorted(_REGISTRY)}")
     return _REGISTRY[name]()
 
 
 def list_nets() -> List[str]:
+    """Registered net names, sorted — what ``--net`` accepts everywhere."""
     return sorted(_REGISTRY)
 
 

@@ -98,7 +98,13 @@ ste_ternary_weights.defvjp(_stw_fwd, _stw_bwd)
 
 
 @jax.custom_vjp
-def ste_ternary_acts(x: jax.Array, threshold: float) -> jax.Array:
+def ste_ternary_acts(x: jax.Array, threshold) -> jax.Array:
+    """Forward: ternarize with ``threshold``.  Backward: hard-tanh STE on
+    ``x`` AND a surrogate gradient on ``threshold`` itself, so a per-layer
+    threshold passed in as a *traced* scalar is trainable (the ROADMAP's
+    learned-thresholds item; cf. xTern's learned quantization bounds).
+    A plain Python float threshold behaves exactly as before — its
+    cotangent is simply discarded by ``jax.grad`` over the params."""
     return ternary_quantize_acts(x, threshold=threshold)
 
 
@@ -109,10 +115,24 @@ def _sta_fwd(x, threshold):
 def _sta_bwd(res, g):
     x, threshold = res
     # hard-tanh style STE window: gradient flows where |x| <= 2*threshold + 1
-    return (jnp.where(jnp.abs(x) <= (2.0 * threshold + 1.0), g, 0.0), None)
+    dx = jnp.where(jnp.abs(x) <= (2.0 * threshold + 1.0), g, 0.0)
+    # d out / d t is exactly -sign(x) * delta(|x| - t); surrogate the delta
+    # with a unit-width rect window around t and sum to the scalar shape.
+    near = (jnp.abs(jnp.abs(x) - threshold) <= 0.5).astype(g.dtype)
+    dt = -jnp.sum(g * jnp.sign(x) * near) / jnp.sqrt(jnp.asarray(g.size, g.dtype))
+    return dx, jnp.asarray(dt, dtype=jnp.asarray(threshold).dtype)
 
 
 ste_ternary_acts.defvjp(_sta_fwd, _sta_bwd)
+
+
+def clamp_threshold(t, lo: float = 0.05, hi: float = 2.0):
+    """Keep a learned activation threshold in its meaningful band: below
+    ``lo`` the ternarizer degenerates to sign(), far above ``hi`` every
+    activation dies.  QAT (``CutieProgram.forward_qat``) and deployment
+    folding (``CutieProgram.quantize``) apply the SAME clamp so the trained
+    value and the packed deploy-table value round-trip exactly."""
+    return jnp.clip(t, lo, hi)
 
 
 # ---------------------------------------------------------------------------

@@ -146,6 +146,33 @@ class DVSEventPipeline:
         return b
 
 
+def pipeline_for_net(graph, batch: int, *, seed: int = 0, noise: float = 0.5):
+    """The data source matching a `repro.api.CutieGraph`: event clips for
+    temporal (CNN+TCN) graphs, ternarized images for spatial ones — sized to
+    the graph's input geometry and class count.  This is what makes
+    ``repro.train.train(net)`` / ``python -m repro.launch.train --net X``
+    work for ANY registry net without per-net data wiring.
+
+    Clip length for temporal graphs is ``passes_per_inference`` (the frames
+    the silicon feeds into the TCN ring per classification); ``noise`` is
+    the image-pipeline noise scale (lower = easier synthetic task).
+    """
+    if graph.is_temporal:
+        if graph.input_ch != 2:
+            raise ValueError(
+                f"{graph.name}: DVSEventPipeline emits 2 polarity channels, "
+                f"graph wants {graph.input_ch}"
+            )
+        return DVSEventPipeline(
+            batch, steps=graph.passes_per_inference, hw=graph.input_hw[0],
+            n_classes=graph.n_classes, seed=seed,
+        )
+    return CifarLikePipeline(
+        batch, seed=seed, n_classes=graph.n_classes, hw=graph.input_hw[0],
+        ch=graph.input_ch, noise=noise,
+    )
+
+
 def pipeline_for(cfg, shape, *, seed: int = 0) -> LMTokenPipeline:
     """Build the LM pipeline matching an (arch, shape) cell."""
     return LMTokenPipeline(

@@ -1,86 +1,117 @@
-"""Training launcher.
+"""QAT training launcher — toward the paper's 86% (CIFAR) / 94.5% (DVS).
 
-Production shape: resolve --arch config -> build mesh + ShardingRules ->
-jit(train_step) with state sharding + donation -> supervised loop with
-atomic checkpoints, exactly-once data cursor, loss guard and straggler
-detector (launch/ft.py).  On this container it runs the reduced (smoke)
-configs on one CPU device; the same code path drives the production mesh.
+Drives `repro.train.train` for any registry net: deterministic pipeline
+(data/pipeline.py, matched to the graph's geometry) -> STE ternary QAT with
+nu/threshold schedules or learned per-layer thresholds -> atomic committed
+checkpoints with restart supervision -> final quantize on the trained grid
+-> eval of BOTH the QAT forward and the packed fused deployment, reporting
+the float->ternary accuracy gap -> silicon cost report.
 
-    PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --smoke \
-        --steps 30 --ckpt-dir /tmp/ckpt [--quant ternary] [--compress-grads]
+    PYTHONPATH=src python -m repro.launch.train --net cifar10_tnn_smoke --smoke
+    PYTHONPATH=src python -m repro.launch.train --net cifar10_tnn \
+        --steps 2000 --batch 64 --thresholds learned --nu-schedule anneal
+    PYTHONPATH=src python -m repro.launch.train --net dvs_cnn_tcn_smoke --smoke
+
+``--smoke`` is the CI train-smoke recipe: ~200 steps, asserts the loss
+decreased and the QAT-vs-deployed gap stays bounded, exits non-zero
+otherwise.  The LM-scaffold launcher this file used to hold moved to
+``python -m repro.launch.train_lm`` (see its docstring for why it is kept).
 """
 from __future__ import annotations
 
 import argparse
-import time
+import shutil
+import sys
 from pathlib import Path
 
-import jax
+from repro.api.program import BACKENDS
+from repro.api.registry import list_nets
+from repro.ckpt.checkpoint import latest_step
+from repro.train import THRESHOLD_MODES, train
 
-from repro.configs import ARCH_IDS, get_config
-from repro.data.pipeline import LMTokenPipeline
-from repro.launch.ft import run_with_restarts
-from repro.launch.mesh import make_local_mesh
-from repro.launch.sharding import ShardingRules
-from repro.launch.steps import make_train_state, make_train_step
-from repro.optim.adamw import AdamWConfig
+SMOKE_GAP_BOUND = 0.15  # |qat - deployed| accuracy, absolute
+
+
+def smoke_recipe(net: str) -> dict:
+    """THE per-net smoke hyperparameters — shared verbatim with
+    benchmarks/train_bench.py so the CLI gate and the CI gate cannot drift.
+    The DVS frontend is ~25x the cifar-smoke FLOPs per step and its
+    symmetry breaks slower on the synthetic task, hence fewer steps at a
+    hotter LR and a smaller batch."""
+    if "dvs" in net:
+        return {"steps": 100, "lr": 5e-3, "batch": 8}
+    return {"steps": 200, "lr": 3e-3, "batch": 32}
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_IDS, default="gemma-2b")
-    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU-sized)")
-    ap.add_argument("--quant", default="none", choices=["none", "ternary"])
-    ap.add_argument("--compress-grads", action="store_true")
-    ap.add_argument("--steps", type=int, default=30)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=64)
-    ap.add_argument("--lr", type=float, default=1e-3)
-    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
-    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--net", default="cifar10_tnn", choices=list_nets(),
+                    help="registry net to train")
+    ap.add_argument("--smoke", action="store_true",
+                    help="the CI train-smoke recipe for this net (see "
+                         "smoke_recipe): assert loss decrease and "
+                         f"|qat-deployed| gap <= {SMOKE_GAP_BOUND}")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="train steps (default 1000, or the net's smoke "
+                         "recipe with --smoke)")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="default 32, or the net's smoke recipe with --smoke")
+    ap.add_argument("--lr", type=float, default=None,
+                    help="default 1e-3, or the net's smoke recipe with --smoke")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_qat_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true",
+                    help="continue from the newest committed checkpoint in "
+                         "--ckpt-dir instead of wiping it")
+    ap.add_argument("--thresholds", default="fixed", choices=THRESHOLD_MODES,
+                    help="activation thresholds: fixed | anneal (scheduled) "
+                         "| learned (per-layer, trained via the STE "
+                         "threshold gradient)")
+    ap.add_argument("--nu-schedule", default="const",
+                    help="TWN nu: const | anneal | <float> (piecewise-constant)")
+    ap.add_argument("--no-per-channel", dest="per_channel", action="store_false",
+                    help="train on the legacy per-layer quantization grid "
+                         "instead of the per-OCU grid deployment packs")
+    ap.add_argument("--backend", default="fused", choices=list(BACKENDS),
+                    help="deploy backend for the final eval (default: fused)")
+    ap.add_argument("--eval-batches", type=int, default=4)
+    ap.add_argument("--gap-bound", type=float, default=SMOKE_GAP_BOUND,
+                    help="--smoke: max allowed |qat - deployed| accuracy gap")
     args = ap.parse_args(argv)
 
-    cfg = get_config(args.arch, quant=args.quant, smoke=args.smoke)
-    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=5, total_steps=args.steps)
-    mesh = make_local_mesh()
-    rules = ShardingRules(mesh)
-    shard = rules.make_shard_fn()
+    recipe = smoke_recipe(args.net) if args.smoke else {}
+    steps = args.steps if args.steps is not None else recipe.get("steps", 1000)
+    lr = args.lr if args.lr is not None else recipe.get("lr", 1e-3)
+    batch = args.batch if args.batch is not None else recipe.get("batch", 32)
+    ckpt_dir = Path(args.ckpt_dir)
+    if not args.resume and latest_step(ckpt_dir) is not None:
+        # a stale checkpoint would silently resume someone else's run
+        print(f"[train] wiping stale checkpoints under {ckpt_dir} "
+              f"(pass --resume to continue them)")
+        shutil.rmtree(ckpt_dir)
 
-    pipe = LMTokenPipeline(
-        cfg.vocab_size, args.seq, args.batch, seed=args.seed,
-        frontend_seq=cfg.frontend_seq if cfg.frontend == "vision" else 0,
-        d_model=cfg.d_model,
-        enc_seq=cfg.enc_seq_len if cfg.is_encdec else 0,
+    report = train(
+        args.net, steps=steps, batch=batch, lr=lr, seed=args.seed,
+        ckpt_dir=ckpt_dir, ckpt_every=args.ckpt_every,
+        nu_schedule=args.nu_schedule, thresholds=args.thresholds,
+        per_channel=args.per_channel, eval_batches=args.eval_batches,
+        backend=args.backend,
     )
+    print(report.summary())
+    print(report.deployed.silicon_report(v=0.5).summary())
+    print(f"[train] final checkpoint: step {latest_step(ckpt_dir)} "
+          f"under {ckpt_dir}")
 
-    with mesh:
-        step_raw = make_train_step(
-            cfg, opt_cfg, shard=shard, compress_grads=args.compress_grads
-        )
-        step_jit = jax.jit(step_raw, donate_argnums=(0,))
-
-        def make_step():
-            return step_jit
-
-        def init_state():
-            return make_train_state(cfg, jax.random.PRNGKey(args.seed),
-                                    compress=args.compress_grads)
-
-        t0 = time.time()
-        state, hist = run_with_restarts(
-            make_step, init_state, pipe,
-            ckpt_dir=Path(args.ckpt_dir), n_steps=args.steps,
-            ckpt_every=args.ckpt_every,
-        )
-    dt = time.time() - t0
-    losses = hist["losses"]
-    print(f"[train] {cfg.name}: {len(losses)} steps in {dt:.1f}s "
-          f"({dt/max(len(losses),1)*1e3:.0f} ms/step)")
-    print(f"[train] loss {losses[0]:.4f} -> {losses[-1]:.4f} "
-          f"(restarts={hist['restarts']})")
-    assert losses[-1] < losses[0], "training did not reduce loss"
-    return state, hist
+    if args.smoke:
+        failures = report.gate(args.gap_bound)  # same gate train_bench runs
+        for f in failures:
+            print(f"[train] FAIL {f}", file=sys.stderr)
+        if failures:
+            sys.exit(1)
+        print(f"[train] smoke OK: loss decreased, "
+              f"gap {report.final_eval.gap:+.3f} within {args.gap_bound}")
+    return report
 
 
 if __name__ == "__main__":

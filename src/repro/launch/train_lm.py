@@ -1,0 +1,94 @@
+"""LM-scaffold training launcher (QUARANTINED — not the paper's loop).
+
+This is the generic sharded-LM harness the repo grew around before the
+CUTIE pipeline existed: resolve --arch config -> build mesh + ShardingRules
+-> jit(train_step) with state sharding + donation -> supervised loop with
+atomic checkpoints, exactly-once data cursor, loss guard and straggler
+detector (launch/ft.py).  It has nothing to do with TCN-CUTIE's networks;
+it is kept because it is the only driver that exercises the mesh/sharding/
+FT machinery at LM scale (tests/test_sharding_rules.py, test_ckpt_ft.py,
+examples/train_ternary_lm.py) — see docs/architecture.md ("What the LM
+scaffold is still for").
+
+The paper's training loop — ternary QAT on `CutieProgram.forward_qat` —
+lives in `repro.train` and is driven by ``python -m repro.launch.train``.
+
+    PYTHONPATH=src python -m repro.launch.train_lm --arch gemma-2b --smoke \
+        --steps 30 --ckpt-dir /tmp/ckpt [--quant ternary] [--compress-grads]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data.pipeline import LMTokenPipeline
+from repro.launch.ft import run_with_restarts
+from repro.launch.mesh import make_local_mesh
+from repro.launch.sharding import ShardingRules
+from repro.launch.steps import make_train_state, make_train_step
+from repro.optim.adamw import AdamWConfig
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="gemma-2b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU-sized)")
+    ap.add_argument("--quant", default="none", choices=["none", "ternary"])
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, quant=args.quant, smoke=args.smoke)
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=5, total_steps=args.steps)
+    mesh = make_local_mesh()
+    rules = ShardingRules(mesh)
+    shard = rules.make_shard_fn()
+
+    pipe = LMTokenPipeline(
+        cfg.vocab_size, args.seq, args.batch, seed=args.seed,
+        frontend_seq=cfg.frontend_seq if cfg.frontend == "vision" else 0,
+        d_model=cfg.d_model,
+        enc_seq=cfg.enc_seq_len if cfg.is_encdec else 0,
+    )
+
+    with mesh:
+        step_raw = make_train_step(
+            cfg, opt_cfg, shard=shard, compress_grads=args.compress_grads
+        )
+        step_jit = jax.jit(step_raw, donate_argnums=(0,))
+
+        def make_step():
+            return step_jit
+
+        def init_state():
+            return make_train_state(cfg, jax.random.PRNGKey(args.seed),
+                                    compress=args.compress_grads)
+
+        t0 = time.time()
+        state, hist = run_with_restarts(
+            make_step, init_state, pipe,
+            ckpt_dir=Path(args.ckpt_dir), n_steps=args.steps,
+            ckpt_every=args.ckpt_every,
+        )
+    dt = time.time() - t0
+    losses = hist["losses"]
+    print(f"[train] {cfg.name}: {len(losses)} steps in {dt:.1f}s "
+          f"({dt/max(len(losses),1)*1e3:.0f} ms/step)")
+    print(f"[train] loss {losses[0]:.4f} -> {losses[-1]:.4f} "
+          f"(restarts={hist['restarts']})")
+    assert losses[-1] < losses[0], "training did not reduce loss"
+    return state, hist
+
+
+if __name__ == "__main__":
+    main()

@@ -49,6 +49,7 @@ class PoolState:
     def create(
         pool_size: int, n_steps: int, channels: int, dtype=jnp.float32
     ) -> "PoolState":
+        """All-empty pool: zero rings, every cursor at 0, no frames seen."""
         return PoolState(
             buf=jnp.zeros((pool_size, n_steps, channels), dtype),
             cursor=jnp.zeros((pool_size,), jnp.int32),

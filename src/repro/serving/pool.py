@@ -224,9 +224,12 @@ class SessionPool:
     # -- introspection -----------------------------------------------------
 
     def slot_of(self, stream_id: str) -> int:
+        """The pool slot this stream occupies (KeyError if not admitted)."""
         return self._slot_of[self._require(stream_id)]
 
     def steps_seen(self, stream_id: str) -> int:
+        """Frames this stream has absorbed since (re)admission — the
+        per-slot analogue of `StreamSession.steps_seen`."""
         return int(self.state.steps[self._slot_of[self._require(stream_id)]])
 
     def window_warm(self, stream_id: str) -> bool:

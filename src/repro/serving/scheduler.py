@@ -90,6 +90,8 @@ class ContinuousBatcher:
     # -- submission --------------------------------------------------------
 
     def submit(self, request: StreamRequest) -> None:
+        """Queue one stream for admission (from its ``arrival`` tick on).
+        Stream ids must be unique across the batcher's lifetime."""
         ids = (
             {r.stream_id for r in self._queue}
             | set(self._inflight)
@@ -100,6 +102,7 @@ class ContinuousBatcher:
         self._queue.append(request)
 
     def submit_many(self, requests) -> None:
+        """`submit` each request in order (FIFO admission preserved)."""
         for r in requests:
             self.submit(r)
 
@@ -169,6 +172,8 @@ class ContinuousBatcher:
     # -- reporting ---------------------------------------------------------
 
     def stats(self) -> Dict[str, float]:
+        """Serving-report aggregates: ticks run, streams completed, mean
+        pool occupancy, and accuracy over the labeled requests."""
         occ = self.occupancy_trace
         done = self.results
         acc = [r.correct for r in done if r.correct is not None]

@@ -1,0 +1,48 @@
+"""`repro.train` — the QAT training subsystem (the pipeline's first stage).
+
+The paper's accuracies (86% CIFAR-10 / 94.5% DVS) come from ternary QAT;
+this package trains any `repro.api` registry net toward them and hands the
+result straight to the deploy/serving stack:
+
+    from repro.train import train
+    report = train("cifar10_tnn_smoke", steps=200, batch=32)
+    print(report.summary())                              # loss + qat/deployed gap
+    report.deployed.forward(x, backend="fused")          # packed 2-bit inference
+
+Layering: `schedules` (piecewise-constant nu/threshold values — static per
+jit trace) <- `loop` (STE train step, segment runner over the existing
+ckpt/FT stack, `TrainReport`) <- `evaluate` (QAT vs deployed accuracy, the
+measured float->ternary gap).  CLI driver: ``python -m repro.launch.train``.
+"""
+
+from repro.train import schedules
+from repro.train.evaluate import (
+    EVAL_STEP_BASE,
+    EvalReport,
+    batch_accuracy,
+    eval_batches,
+    evaluate,
+)
+from repro.train.loop import (
+    THRESHOLD_MODES,
+    TrainReport,
+    cross_entropy,
+    init_train_state,
+    make_qat_step,
+    train,
+)
+
+__all__ = [
+    "EVAL_STEP_BASE",
+    "EvalReport",
+    "THRESHOLD_MODES",
+    "TrainReport",
+    "batch_accuracy",
+    "cross_entropy",
+    "eval_batches",
+    "evaluate",
+    "init_train_state",
+    "make_qat_step",
+    "schedules",
+    "train",
+]

@@ -1,0 +1,95 @@
+"""Eval for the QAT loop: the float->ternary gap, measured, every time.
+
+The paper's headline claims are accuracies of the DEPLOYED ternary network
+(86% CIFAR-10, 94.5% DVS), not of the float QAT model — so this module
+always reports both sides and their difference:
+
+  * ``qat``       accuracy of `CutieProgram.forward_qat` (STE fake-quant)
+  * ``deployed``  accuracy of `DeployedProgram.forward` on the packed 2-bit
+                  tables, default ``backend="fused"`` — the exact datapath
+                  the silicon runs (int8 ternary inter-layer activations)
+  * ``gap``       qat - deployed, the quantization/folding loss the CI
+                  train-smoke job bounds
+
+Eval batches come from the same deterministic pipeline as training but at a
+disjoint step range (`EVAL_STEP_BASE`), so they are unseen samples from the
+same distribution — the synthetic stand-in for a held-out split.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+EVAL_STEP_BASE = 1_000_000  # pipeline steps reserved for eval batches
+
+
+def batch_accuracy(logits, labels) -> float:
+    """Top-1 accuracy of one logits batch."""
+    return float(np.mean(np.asarray(logits).argmax(-1) == np.asarray(labels)))
+
+
+def eval_batches(pipeline, n_batches: int):
+    """Deterministic held-out batches: the pipeline evaluated at the
+    reserved step range, without touching its training cursor."""
+    return [pipeline.batch_at(EVAL_STEP_BASE + i) for i in range(n_batches)]
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalReport:
+    """Accuracy of both execution paths on the same batches."""
+
+    qat_accuracy: float
+    deployed_accuracy: float
+    backend: str
+    n_examples: int
+
+    @property
+    def gap(self) -> float:
+        """QAT-minus-deployed accuracy: positive = deployment lost accuracy
+        to the packed grid / BN folding; ~0 on a calibrated per-channel
+        quantize of a converged run."""
+        return self.qat_accuracy - self.deployed_accuracy
+
+    def summary(self) -> str:
+        return (
+            f"qat {self.qat_accuracy:.3f} | deployed[{self.backend}] "
+            f"{self.deployed_accuracy:.3f} | gap {self.gap:+.3f} "
+            f"({self.n_examples} examples)"
+        )
+
+
+def evaluate(
+    prog,
+    params: Dict,
+    pipeline,
+    *,
+    deployed=None,
+    n_batches: int = 4,
+    backend: str = "fused",
+    nu: Optional[float] = None,
+) -> EvalReport:
+    """Run both the QAT forward and the deployed forward over ``n_batches``
+    held-out batches.  ``deployed`` defaults to quantizing ``params`` fresh,
+    calibrated on the first eval batch (the recommended deploy recipe)."""
+    batches = eval_batches(pipeline, n_batches)
+    if deployed is None:
+        deployed = prog.quantize(params, calib=batches[0][0], nu=nu)
+    qat_fwd = jax.jit(lambda v: prog.forward_qat(params, v, nu=nu))
+    dep_fwd = jax.jit(lambda v: deployed.forward(v, backend=backend))
+    hits_q = hits_d = total = 0
+    for x, y in batches:
+        yq = np.asarray(qat_fwd(x)).argmax(-1)
+        yd = np.asarray(dep_fwd(x)).argmax(-1)
+        y = np.asarray(y)
+        hits_q += int((yq == y).sum())
+        hits_d += int((yd == y).sum())
+        total += y.shape[0]
+    return EvalReport(
+        qat_accuracy=hits_q / total,
+        deployed_accuracy=hits_d / total,
+        backend=backend,
+        n_examples=total,
+    )

@@ -1,0 +1,288 @@
+"""The QAT training loop: `CutieProgram.forward_qat` -> the paper's recipe.
+
+This is the last stage of the pipeline the repo had not built: everything
+downstream of a *trained* parameter set existed (quantize -> fused deploy ->
+stream/serve -> silicon report), but nothing produced one.  `train()` closes
+the loop for any registry net:
+
+    from repro.train import train
+    report = train("cifar10_tnn_smoke", steps=200, batch=32)
+    print(report.final_eval.summary())          # qat vs deployed(fused) + gap
+    print(report.deployed.silicon_report().summary())
+
+Recipe (CUTIE / TWN lineage):
+
+  * STE fake-quant forward (`forward_qat`): TWN weight quantizer with
+    threshold factor nu, scale-only BN, ternary activations.
+  * AdamW on the float shadow weights (weight decay off by default — decay
+    fights the ternary grid's plateaus), linear-warmup + cosine LR.
+  * nu and (optionally) the activation threshold follow piecewise-constant
+    schedules (`repro.train.schedules`); with ``thresholds="learned"`` each
+    conv/tcn layer instead trains its own threshold scalar through the STE
+    threshold gradient — the ROADMAP's learned-thresholds item.
+  * Fault tolerance rides the existing stack: atomic committed checkpoints
+    (`repro.ckpt`), exactly-once data cursor, loss guard + restart
+    supervision (`repro.launch.ft.run_with_restarts`) — a restore resumes
+    the run bit-identically (tested in tests/test_train.py).
+  * Eval always reports BOTH the QAT accuracy and the deployed accuracy on
+    the packed tables (default ``backend="fused"``), so the float->ternary
+    gap is a measured number, never an assumption (`repro.train.evaluate`).
+
+Per-channel QAT (``per_channel=True``, the default here) trains on the same
+per-OCU quantization grid the deploy tables pack, which is what keeps the
+gap near zero; the graph-default per-layer grid is kept for the legacy
+recipe comparisons.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.api.program import CutieProgram, check_backend
+from repro.api.registry import get_graph
+from repro.data.pipeline import pipeline_for_net
+from repro.launch.ft import run_with_restarts
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.train import schedules
+from repro.train.evaluate import EvalReport, evaluate
+
+THRESHOLD_MODES = ("fixed", "learned", "anneal")
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy over integer labels."""
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def make_qat_step(
+    prog: CutieProgram,
+    opt_cfg: AdamWConfig,
+    *,
+    nu: Optional[float] = None,
+):
+    """One jitted QAT train step: ``(state, (x, y)) -> (state, metrics)``.
+
+    ``state`` is the ``{"params", "opt"}`` dict from `init_train_state`;
+    metrics carry ``loss``, ``accuracy`` (train batch), ``grad_norm`` and
+    ``lr``.  ``nu`` is static per trace — the loop re-jits per schedule
+    segment, never per step.
+    """
+
+    def step(state: Dict, batch: Tuple[jax.Array, jax.Array]):
+        x, y = batch
+
+        def loss_fn(p):
+            logits = prog.forward_qat(p, x, nu=nu)
+            return cross_entropy(logits, y), logits
+
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(state["params"])
+        params, opt, info = adamw_update(opt_cfg, state["params"], grads, state["opt"])
+        acc = jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+        metrics = {"loss": loss, "accuracy": acc, **info}
+        return {"params": params, "opt": opt}, metrics
+
+    return step
+
+
+def init_train_state(
+    prog: CutieProgram, key: jax.Array, *, learn_thresholds: bool = False
+) -> Dict:
+    """Fresh ``{"params", "opt"}`` train-state pytree (checkpointable as-is
+    through `repro.ckpt.checkpoint` — every leaf is an array)."""
+    params = prog.init(key, learn_thresholds=learn_thresholds)
+    return {"params": params, "opt": adamw_init(params)}
+
+
+@dataclasses.dataclass
+class TrainReport:
+    """Everything `train()` measured, plus the deployable artifacts."""
+
+    net: str
+    steps: int
+    losses: List[float]
+    evals: List[Tuple[int, EvalReport]]     # (step, report) at segment ends
+    final_eval: EvalReport
+    restarts: int
+    wall_s: float
+    nu_final: float
+    thresholds_mode: str
+    learned_thresholds: Optional[Dict]      # {"conv": [...], "tcn": [...]} or None
+    params: Dict                            # trained float params
+    deployed: object                        # DeployedProgram (packed tables)
+
+    @property
+    def ms_per_step(self) -> float:
+        return self.wall_s / max(len(self.losses), 1) * 1e3
+
+    @property
+    def loss_decreased(self) -> bool:
+        """Robust 'training worked' predicate: the last quarter's mean loss
+        is below the first quarter's (single-step noise is not a signal).
+        True when no new steps ran (a resume at completion is not a
+        regression)."""
+        n = len(self.losses)
+        if n == 0:
+            return True
+        if n < 4:
+            return self.losses[-1] < self.losses[0]
+        q = max(n // 4, 1)
+        first = sum(self.losses[:q]) / q
+        last = sum(self.losses[-q:]) / q
+        return last < first
+
+    def gate(self, gap_bound: float) -> List[str]:
+        """The train-smoke gate, shared by the CLI launcher and
+        benchmarks/train_bench.py so the two cannot drift: empty list = ok,
+        else human-readable failure lines (loss decrease + |gap| bound)."""
+        failures = []
+        if not self.loss_decreased:
+            n = len(self.losses)
+            q = max(n // 4, 1)
+            failures.append(
+                f"{self.net}: loss did not decrease "
+                f"(first-quarter mean {sum(self.losses[:q]) / q:.4f} -> "
+                f"last-quarter mean {sum(self.losses[-q:]) / q:.4f})"
+            )
+        if abs(self.final_eval.gap) > gap_bound:
+            failures.append(
+                f"{self.net}: |qat-deployed| accuracy gap "
+                f"{self.final_eval.gap:+.3f} exceeds bound {gap_bound}"
+            )
+        return failures
+
+    def summary(self) -> str:
+        e = self.final_eval
+        curve = (
+            f"loss {self.losses[0]:.4f} -> {self.losses[-1]:.4f} "
+            f"(decreased={self.loss_decreased})"
+            if self.losses else
+            "no new steps (checkpoint already at/past the requested step)"
+        )
+        return (
+            f"[{self.net}] {len(self.losses)} steps in {self.wall_s:.1f}s "
+            f"({self.ms_per_step:.0f} ms/step, restarts={self.restarts})\n"
+            f"  {curve}\n"
+            f"  eval: {e.summary()}"
+        )
+
+
+def train(
+    net: str,
+    *,
+    steps: int = 200,
+    batch: int = 32,
+    lr: float = 1e-3,
+    seed: int = 0,
+    ckpt_dir="/tmp/repro_qat_ckpt",
+    ckpt_every: int = 50,
+    nu_schedule: str = "const",
+    thresholds: str = "fixed",
+    per_channel: bool = True,
+    eval_batches: int = 4,
+    backend: str = "fused",
+    weight_decay: float = 0.0,
+    warmup_steps: int = 10,
+    noise: float = 0.5,
+    log=print,
+) -> TrainReport:
+    """Train a registry net end-to-end: data -> QAT -> quantize -> eval.
+
+    ``net``            registry name (``cifar10_tnn``, ``dvs_cnn_tcn``, or
+                       their ``_smoke`` variants; any `register_net` entry).
+    ``nu_schedule``    "const" | "anneal" | a float (see `schedules.resolve`).
+    ``thresholds``     "fixed" (graph's act_threshold), "anneal" (scheduled
+                       static), or "learned" (per-layer trainable scalars).
+    ``per_channel``    train on the per-OCU quantization grid deployment
+                       packs (recommended; keeps the QAT->deployed gap ~0).
+    ``backend``        deploy backend the final eval measures (the fused
+                       path is the silicon's datapath).
+
+    Returns a `TrainReport`; the final checkpoint stays committed under
+    ``ckpt_dir`` and ``report.deployed`` is ready for `.stream()`/
+    `.serve()`/`.silicon_report()`.
+    """
+    if thresholds not in THRESHOLD_MODES:
+        raise ValueError(f"thresholds must be one of {THRESHOLD_MODES}")
+    if steps < 1:
+        raise ValueError(f"steps must be >= 1, got {steps}")
+    check_backend(backend)  # fail a typo now, not after the whole run
+    graph = get_graph(net)
+    if per_channel:
+        graph = dataclasses.replace(graph, qat_per_channel=True)
+    prog = CutieProgram(graph)
+    pipe = pipeline_for_net(graph, batch, seed=seed, noise=noise)
+    opt_cfg = AdamWConfig(
+        lr=lr, warmup_steps=warmup_steps, total_steps=steps,
+        weight_decay=weight_decay,
+    )
+    nu_sched = schedules.resolve(nu_schedule, graph.weight_nu, steps)
+    th_sched = (
+        schedules.anneal(graph.act_threshold, steps, start_frac=0.6)
+        if thresholds == "anneal" else schedules.constant(graph.act_threshold)
+    )
+    key = jax.random.PRNGKey(seed)
+
+    def init_state():
+        return init_train_state(prog, key, learn_thresholds=thresholds == "learned")
+
+    losses: List[float] = []
+    evals: List[Tuple[int, EvalReport]] = []
+    restarts = 0
+    state = None
+    t0 = time.time()
+    segs = schedules.merged_segments(steps, nu_sched, th_sched)
+    for si, (a, b, (nu_v, th_v)) in enumerate(segs):
+        # a scheduled static threshold is a graph property; learned
+        # thresholds live in the params and ignore th_v
+        seg_graph = (
+            graph if thresholds == "learned"
+            else dataclasses.replace(graph, act_threshold=th_v)
+        )
+        seg_prog = CutieProgram(seg_graph)
+        step_raw = make_qat_step(seg_prog, opt_cfg, nu=nu_v)
+        step_jit = jax.jit(step_raw, donate_argnums=(0,))
+        if len(segs) > 1:
+            log(f"[train] segment {si + 1}/{len(segs)}: steps [{a}, {b}) "
+                f"nu={nu_v:.3f} threshold="
+                f"{'learned' if thresholds == 'learned' else f'{th_v:.3f}'}")
+        state, hist = run_with_restarts(
+            lambda: step_jit, init_state, pipe,
+            ckpt_dir=ckpt_dir, n_steps=b, ckpt_every=ckpt_every, log=log,
+        )
+        losses += hist["losses"]
+        restarts += hist["restarts"]
+        # segment-boundary eval (final eval happens below); skip when the
+        # segment ran zero new steps — a resume-at-completion replay would
+        # otherwise pay a fresh quantize+jit per boundary for nothing
+        if b < steps and hist["losses"]:
+            evals.append((b, evaluate(
+                seg_prog, state["params"], pipe,
+                n_batches=max(eval_batches // 2, 1), backend=backend, nu=nu_v,
+            )))
+    wall = time.time() - t0
+
+    # final: quantize on the grid the last segment trained — nu_sched.final,
+    # with learned thresholds folding in via quantize() — and measure both paths
+    final_graph = (
+        graph if thresholds == "learned"
+        else dataclasses.replace(graph, act_threshold=th_sched.final)
+    )
+    final_prog = CutieProgram(final_graph)
+    calib, _ = pipe.batch_at(0)
+    deployed = final_prog.quantize(state["params"], calib=calib, nu=nu_sched.final)
+    final_eval = evaluate(
+        final_prog, state["params"], pipe, deployed=deployed,
+        n_batches=eval_batches, backend=backend, nu=nu_sched.final,
+    )
+    learned = state["params"].get("thresh") if thresholds == "learned" else None
+    return TrainReport(
+        net=net, steps=steps, losses=losses, evals=evals, final_eval=final_eval,
+        restarts=restarts, wall_s=wall, nu_final=nu_sched.final,
+        thresholds_mode=thresholds, learned_thresholds=learned,
+        params=state["params"], deployed=deployed,
+    )

@@ -1,0 +1,277 @@
+"""QAT training subsystem: STE numerics, schedules, checkpoint resume.
+
+The three properties ISSUE 4 pins down:
+  * STE gradients flow through ternarized weights AND learned thresholds
+    (nonzero, finite — a dead STE trains nothing);
+  * learned thresholds round-trip through `quantize()` into the packed
+    deploy tables and keep fused == ref bit-exact;
+  * checkpoint save/restore resumes training bit-identically (the atomic
+    ckpt/ + exactly-once cursor contract, now under the QAT loop).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api.program import CutieProgram
+from repro.api.quantize import resolve_deploy_thresholds
+from repro.api.registry import get_graph
+from repro.core.ternary import clamp_threshold, ste_ternary_acts
+from repro.data.pipeline import pipeline_for_net
+from repro.train import (
+    cross_entropy,
+    evaluate,
+    init_train_state,
+    make_qat_step,
+    schedules,
+    train,
+)
+from repro.optim.adamw import AdamWConfig
+
+
+def _smoke_prog(per_channel: bool = True) -> CutieProgram:
+    g = get_graph("cifar10_tnn_smoke")
+    if per_channel:
+        g = dataclasses.replace(g, qat_per_channel=True)
+    return CutieProgram(g)
+
+
+class TestSTEGradients:
+    def test_weight_gradients_nonzero_and_loss_finite(self):
+        prog = _smoke_prog()
+        params = prog.init(jax.random.PRNGKey(0))
+        pipe = pipeline_for_net(prog.graph, 8, seed=0)
+        x, y = pipe.next_batch()
+
+        def loss_fn(p):
+            return cross_entropy(prog.forward_qat(p, x), y)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        assert np.isfinite(float(loss))
+        for i, lp in enumerate(grads["conv"]):
+            g = np.asarray(lp["w"])
+            assert np.isfinite(g).all(), f"conv{i} grad not finite"
+            assert np.abs(g).max() > 0, f"conv{i} grad all-zero (dead STE)"
+        gfc = np.asarray(grads["fc"]["w"])
+        assert np.isfinite(gfc).all() and np.abs(gfc).max() > 0
+
+    def test_threshold_gradients_nonzero(self):
+        prog = _smoke_prog()
+        params = prog.init(jax.random.PRNGKey(0), learn_thresholds=True)
+        pipe = pipeline_for_net(prog.graph, 8, seed=0)
+        x, y = pipe.next_batch()
+
+        def loss_fn(p):
+            return cross_entropy(prog.forward_qat(p, x), y)
+
+        grads = jax.grad(loss_fn)(params)
+        tg = [float(t) for t in grads["thresh"]["conv"]]
+        assert all(np.isfinite(tg)), tg
+        assert any(abs(t) > 0 for t in tg), (
+            f"all threshold gradients zero — the STE surrogate is dead: {tg}"
+        )
+
+    def test_ste_acts_threshold_vjp_direction(self):
+        """Raising the threshold can only kill activations near it: for a
+        positive input just above t, d out/d t must be negative."""
+        x = jnp.asarray([0.6, -0.6, 2.0])
+        _, vjp = jax.vjp(ste_ternary_acts, x, jnp.asarray(0.5))
+        _, dt = vjp(jnp.ones_like(x))
+        # +0.6 contributes -1, -0.6 contributes +1 * (-sign) = +1 -> they
+        # cancel; 2.0 is outside the unit window around t=0.5 -> total 0
+        assert float(dt) == pytest.approx(0.0)
+        _, vjp = jax.vjp(ste_ternary_acts, jnp.asarray([0.6, 2.0]), jnp.asarray(0.5))
+        _, dt = vjp(jnp.ones((2,)))
+        assert float(dt) < 0
+
+    def test_forward_ignores_missing_thresh_group(self):
+        """Params without the thresh group run exactly as before (the
+        learned-thresholds path is opt-in)."""
+        prog = _smoke_prog()
+        params = prog.init(jax.random.PRNGKey(0))
+        withT = prog.init(jax.random.PRNGKey(0), learn_thresholds=True)
+        x = jnp.sign(jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16, 3)))
+        a = prog.forward_qat(params, x)
+        b = prog.forward_qat(withT, x)  # thresholds init at act_threshold
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+class TestLearnedThresholdRoundTrip:
+    def test_quantize_folds_clamped_thresholds(self):
+        prog = _smoke_prog()
+        params = prog.init(jax.random.PRNGKey(0), learn_thresholds=True)
+        vals = [0.3, 0.9, 0.01, 5.0, 0.45, 0.55, 0.7, 0.5]
+        params["thresh"]["conv"] = [jnp.asarray(v, jnp.float32) for v in vals]
+        deployed = prog.quantize(params)
+        got = [e["threshold"] for e in deployed.tables["conv"]]
+        want = [float(clamp_threshold(jnp.asarray(v))) for v in vals]
+        assert got == pytest.approx(want)
+        # resolve helper agrees with what the tables hold
+        assert resolve_deploy_thresholds(prog.graph, params)["conv"] == (
+            pytest.approx(want)
+        )
+
+    def test_fused_matches_ref_with_learned_thresholds(self):
+        prog = _smoke_prog()
+        params = prog.init(jax.random.PRNGKey(0), learn_thresholds=True)
+        params["thresh"]["conv"] = [
+            jnp.asarray(v, jnp.float32)
+            for v in (0.35, 0.5, 0.65, 0.5, 0.45, 0.6, 0.5, 0.4)
+        ]
+        x = jnp.sign(jax.random.normal(jax.random.PRNGKey(2), (2, 16, 16, 3)))
+        deployed = prog.quantize(params, calib=x)
+        fused = np.asarray(deployed.forward(x, backend="fused"))
+        ref = np.asarray(deployed.forward(x, backend="ref"))
+        np.testing.assert_array_equal(fused, ref)
+
+    def test_default_thresholds_without_learning(self):
+        prog = _smoke_prog()
+        params = prog.init(jax.random.PRNGKey(0))
+        th = resolve_deploy_thresholds(prog.graph, params)
+        assert th["conv"] == [prog.graph.act_threshold] * 8
+        assert th["tcn"] == []
+
+    def test_quantize_calibrates_on_the_overridden_nu_grid(self):
+        """The calib forward must ternarize weights with the SAME nu the
+        tables pack — otherwise the folded BN scales belong to a different
+        weight grid and deployed logits drift off forward_qat."""
+        prog = _smoke_prog(per_channel=True)
+        params = prog.init(jax.random.PRNGKey(0))
+        x = jnp.sign(jax.random.normal(jax.random.PRNGKey(3), (4, 16, 16, 3)))
+        for nu in (0.4, 1.0):
+            qat = np.asarray(prog.forward_qat(params, x, nu=nu))
+            dep = np.asarray(
+                prog.quantize(params, calib=x, nu=nu).forward(x, backend="ref")
+            )
+            np.testing.assert_allclose(qat, dep, rtol=1e-4, atol=1e-4)
+
+    def test_nu_override_changes_packing(self):
+        prog = _smoke_prog()
+        params = prog.init(jax.random.PRNGKey(0))
+        lo = prog.quantize(params, nu=0.3).tables["conv"][0]["packed"]
+        hi = prog.quantize(params, nu=1.1).tables["conv"][0]["packed"]
+        assert not np.array_equal(np.asarray(lo), np.asarray(hi)), (
+            "nu override did not reach the packing path"
+        )
+
+
+class TestSchedules:
+    def test_piecewise_lookup_and_segments(self):
+        s = schedules.PiecewiseConstant(boundaries=(10, 20), values=(0.4, 0.6, 0.7))
+        assert s(0) == 0.4 and s(9) == 0.4
+        assert s(10) == 0.6 and s(19) == 0.6
+        assert s(20) == 0.7 and s(10**6) == 0.7
+        assert s.final == 0.7
+        assert s.segments(25) == [(0, 10, 0.4), (10, 20, 0.6), (20, 25, 0.7)]
+        assert s.segments(15) == [(0, 10, 0.4), (10, 15, 0.6)]
+
+    def test_anneal_reaches_target(self):
+        s = schedules.anneal(0.7, 100)
+        assert s(0) == pytest.approx(0.7 * 0.6)
+        assert s(99) == pytest.approx(0.7)
+        assert s.final == pytest.approx(0.7)
+        vals = [s(i) for i in range(100)]
+        assert vals == sorted(vals), "anneal must be monotone"
+
+    def test_merged_segments_cover_and_align(self):
+        a = schedules.PiecewiseConstant(boundaries=(10,), values=(1.0, 2.0))
+        b = schedules.PiecewiseConstant(boundaries=(15,), values=(5.0, 6.0))
+        segs = schedules.merged_segments(20, a, b)
+        assert segs == [
+            (0, 10, (1.0, 5.0)), (10, 15, (2.0, 5.0)), (15, 20, (2.0, 6.0)),
+        ]
+
+    def test_resolve_specs(self):
+        assert schedules.resolve("const", 0.7, 10).final == 0.7
+        assert schedules.resolve("0.55", 0.7, 10)(3) == 0.55
+        assert schedules.resolve("anneal", 0.7, 10).final == pytest.approx(0.7)
+        with pytest.raises(ValueError):
+            schedules.resolve("bogus", 0.7, 10)
+
+
+class TestCheckpointResume:
+    def test_resume_is_bit_identical(self, tmp_path):
+        """Train 8 steps straight vs 4 + restore + 4: identical losses on
+        the overlap and bit-identical final params (exactly-once data cursor
+        + full train-state pytree through ckpt/)."""
+        kw = dict(steps=8, batch=8, lr=1e-3, seed=3, ckpt_every=4,
+                  eval_batches=1, log=lambda *_: None)
+        full = train("cifar10_tnn_smoke", ckpt_dir=tmp_path / "a", **kw)
+        half = train("cifar10_tnn_smoke", ckpt_dir=tmp_path / "b",
+                     **{**kw, "steps": 4})
+        resumed = train("cifar10_tnn_smoke", ckpt_dir=tmp_path / "b", **kw)
+        assert half.losses == full.losses[:4]
+        assert resumed.losses == full.losses[4:]
+        for got, want in zip(
+            jax.tree_util.tree_leaves(resumed.params),
+            jax.tree_util.tree_leaves(full.params),
+        ):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_resume_at_completion_is_graceful(self, tmp_path):
+        """Re-running train() on a ckpt_dir already at the requested step
+        runs zero new steps but still returns a usable report (summary()
+        and the smoke gate must not crash on the empty loss list)."""
+        kw = dict(steps=4, batch=8, lr=1e-3, seed=1, ckpt_every=2,
+                  eval_batches=1, log=lambda *_: None)
+        first = train("cifar10_tnn_smoke", ckpt_dir=tmp_path, **kw)
+        again = train("cifar10_tnn_smoke", ckpt_dir=tmp_path, **kw)
+        assert len(first.losses) == 4 and again.losses == []
+        assert again.loss_decreased  # no new steps != a regression
+        assert "no new steps" in again.summary()
+        assert again.gate(gap_bound=1.0) == []
+
+    def test_train_state_roundtrip_structure(self, tmp_path):
+        from repro.ckpt.checkpoint import restore_checkpoint, save_checkpoint
+
+        prog = _smoke_prog()
+        state = init_train_state(prog, jax.random.PRNGKey(0), learn_thresholds=True)
+        save_checkpoint(tmp_path, 1, state, pipeline_cursor={"seed": 0, "step": 5})
+        like = init_train_state(prog, jax.random.PRNGKey(1), learn_thresholds=True)
+        restored, meta = restore_checkpoint(tmp_path, like)
+        assert meta["pipeline_cursor"]["step"] == 5
+        for got, want in zip(
+            jax.tree_util.tree_leaves(restored), jax.tree_util.tree_leaves(state)
+        ):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestTrainLoop:
+    def test_step_reduces_loss_and_reports_metrics(self):
+        prog = _smoke_prog()
+        pipe = pipeline_for_net(prog.graph, 16, seed=0)
+        state = init_train_state(prog, jax.random.PRNGKey(0))
+        step = jax.jit(make_qat_step(prog, AdamWConfig(lr=3e-3, warmup_steps=2,
+                                                       total_steps=40,
+                                                       weight_decay=0.0)))
+        losses = []
+        for _ in range(40):
+            state, m = step(state, pipe.next_batch())
+            losses.append(float(m["loss"]))
+            assert set(m) >= {"loss", "accuracy", "grad_norm", "lr"}
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]), (losses[:5], losses[-5:])
+
+    def test_train_end_to_end_smoke(self, tmp_path):
+        rep = train("cifar10_tnn_smoke", steps=60, batch=32, lr=3e-3,
+                    ckpt_dir=tmp_path, ckpt_every=30, eval_batches=2,
+                    log=lambda *_: None)
+        assert rep.loss_decreased
+        assert len(rep.losses) == 60
+        e = rep.final_eval
+        assert 0.0 <= e.qat_accuracy <= 1.0 and 0.0 <= e.deployed_accuracy <= 1.0
+        assert e.backend == "fused"
+        # the deployed program is live: silicon report + fused forward work
+        assert rep.deployed.silicon_report().ideal.energy_j > 0
+        assert rep.summary()
+
+    def test_evaluate_uses_heldout_batches(self):
+        prog = _smoke_prog()
+        pipe = pipeline_for_net(prog.graph, 8, seed=0)
+        params = prog.init(jax.random.PRNGKey(0))
+        before = pipe.state.step
+        rep = evaluate(prog, params, pipe, n_batches=2)
+        assert pipe.state.step == before, "evaluate must not advance the cursor"
+        assert rep.n_examples == 16
+        assert rep.gap == pytest.approx(rep.qat_accuracy - rep.deployed_accuracy)
