@@ -1,4 +1,4 @@
-"""Backend benchmark: ref / interpret / pallas / fused across the registry nets.
+"""Backend benchmark: ref/interpret/pallas/fused/bitsim across registry nets.
 
 The harness behind ``BENCH_backends.json`` (repo root) — the perf trajectory
 for the deploy backends.  For every (net, workload, batch, backend) cell it
@@ -6,7 +6,8 @@ for the deploy backends.  For every (net, workload, batch, backend) cell it
   * times the jitted whole-network forward (median of ``--repeats``, after a
     compile+warmup call),
   * checks logit agreement against the ``ref`` oracle backend — **exact**
-    (bit-equal) for ``fused``, allclose(1e-4) for the float backends — and
+    (bit-equal) for ``fused`` and ``bitsim``, allclose(1e-4) for the float
+    backends — and
     exits non-zero on disagreement, which is what the CI ``bench-smoke`` job
     gates on.
 
@@ -94,10 +95,10 @@ def bench_cell(deployed, workload: str, x, backends, repeats: int):
 
 
 def check_row(row: dict, net: str, workload: str, batch: int) -> list:
-    """The CI gate: fused must be bit-exact, float backends allclose."""
+    """The CI gate: fused/bitsim must be bit-exact, float backends allclose."""
     where = f"{net}/{workload}/batch{batch}/{row['backend']}"
-    if row["backend"] == "fused" and not row["exact_vs_ref"]:
-        return [f"{where}: fused logits differ from ref "
+    if row["backend"] in ("fused", "bitsim") and not row["exact_vs_ref"]:
+        return [f"{where}: {row['backend']} logits differ from ref "
                 f"(max_abs_diff={row['max_abs_diff_vs_ref']:.3e})"]
     if not row["allclose_vs_ref"]:
         return [f"{where}: logits not allclose to ref "

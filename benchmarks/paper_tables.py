@@ -1,17 +1,35 @@
 """Benchmarks reproducing the paper's tables/figures from the CUTIE model.
 
-  * table1()  — Table 1: CIFAR-10 comparison vs [8]/[9] (energy/inference,
-                throughput, peak efficiency at 0.5 V and 0.9 V).
-  * fig5()    — energy/inference + inferences/sec vs voltage, CIFAR + DVS.
-  * fig6()    — peak energy efficiency + peak throughput vs voltage.
+  * table1()         — Table 1: CIFAR-10 comparison vs [8]/[9]
+                       (energy/inference, throughput, peak efficiency at
+                       0.5 V and 0.9 V).
+  * fig5()           — energy/inference + inferences/sec vs voltage.
+  * fig6()           — peak energy efficiency + peak throughput vs voltage.
+  * silicon_sweep()  — registry nets x voltage corners x {analytic, sim}
+                       cycle/energy rows; ``--silicon`` writes them to the
+                       committed ``BENCH_silicon.json``, whose analytic-vs-
+                       sim divergence is gated by
+                       ``scripts/check_bench_regression.py --silicon``.
 
 The layer lists come from the `repro.api` registry graphs — the SAME graphs
 that drive QAT/deployment — lowered through `export_conv_layers`, so these
 tables stay in lockstep with the executable models.  Each row validates
 against the paper's reported numbers where the paper is internally
 consistent; discrepancies are printed with the calibration factor.
+
+    python benchmarks/paper_tables.py                  # print the tables
+    python benchmarks/paper_tables.py --silicon        # write BENCH_silicon.json
+    python benchmarks/paper_tables.py --bitsim-check   # CI exactness gate
 """
 from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO_ROOT / "src"))
 
 from repro.api import export_conv_layers, get_graph, silicon_report
 from repro.core.cutie_arch import (
@@ -22,6 +40,7 @@ from repro.core.cutie_arch import (
     evaluate_network,
     voltage_sweep,
 )
+from repro.sim import reconcile
 
 HW = CutieHW()
 
@@ -90,3 +109,132 @@ def dvs_tcn_soa_comparison():
         ("truenorth_energy_ratio", PAPER["truenorth_energy_ratio"], 3250.0),
         ("loihi_energy_ratio", PAPER["loihi_energy_ratio"], 63.4),
     ]
+
+
+# ---------------------------------------------------------------------------
+# Registry nets x voltage corners x {analytic, sim}  ->  BENCH_silicon.json
+# ---------------------------------------------------------------------------
+
+SILICON_NETS = (
+    "cifar10_tnn", "dvs_cnn_tcn", "cifar10_tnn_wide",
+    "cifar10_tnn_smoke", "dvs_cnn_tcn_smoke", "cifar10_tnn_wide_smoke",
+)
+SILICON_CORNERS = (0.5, 0.65, 0.8)
+
+
+def silicon_sweep(nets=SILICON_NETS, corners=SILICON_CORNERS):
+    """One row per (net, V, source): cycles and energy under the analytic
+    formula and under the `repro.sim` execution plan, plus the 0.5 V
+    reconciliation (``divergence_at_0v5``).  Pure arithmetic — the rows are
+    bit-reproducible across hosts, so the committed ``BENCH_silicon.json``
+    doubles as the regression baseline for the silicon model itself."""
+    rows = []
+    for net in nets:
+        graph = get_graph(net)
+        rec = reconcile(graph, hw=HW)
+        for v in corners:
+            for source in ("analytic", "sim"):
+                rep = silicon_report(graph, v=v, hw=HW, source=source)
+                rows.append({
+                    "net": net,
+                    "v": v,
+                    "source": source,
+                    "cycles": rep.ideal.cycles,
+                    "ideal_energy_uj": rep.ideal.energy_j * 1e6,
+                    "ideal_inf_per_s": rep.ideal.inf_per_s,
+                    "energy_uj": rep.energy_uj,
+                    "inf_per_s": rep.inf_per_s,
+                    "calibrated": rep.calibrated is not None,
+                    "analytic_schedulable": rec["analytic_schedulable"],
+                    "divergence_at_0v5": rec["divergence"],
+                })
+    return rows
+
+
+def write_silicon_bench(out: Path, nets=SILICON_NETS, corners=SILICON_CORNERS) -> int:
+    rows = silicon_sweep(nets, corners)
+    payload = {
+        "meta": {
+            "schema": "BENCH_silicon.v1",
+            "nets": list(nets),
+            "corners": list(corners),
+            "note": (
+                "deterministic model output - regenerate with "
+                "'python benchmarks/paper_tables.py --silicon' and commit; "
+                "gated by scripts/check_bench_regression.py --silicon"
+            ),
+        },
+        "results": rows,
+    }
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"[silicon] wrote {out} ({len(rows)} rows)")
+    return 0
+
+
+def check_bitsim_exactness(nets=("cifar10_tnn", "dvs_cnn_tcn", "cifar10_tnn_wide")) -> int:
+    """CI `sim-smoke` gate: backend="bitsim" must be bit-exact vs "ref" on
+    the paper-size registry nets — batch forward everywhere, plus a
+    streamed-vs-batch check on the temporal net.  Returns a nonzero exit
+    code on any mismatch."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.api import get_net
+
+    failures = 0
+    for name in nets:
+        prog = get_net(name)
+        g = prog.graph
+        key = jax.random.PRNGKey(0)
+        if g.is_temporal:
+            x = (jax.random.uniform(key, (1, 3, *g.input_hw, g.input_ch))
+                 < 0.05).astype(jnp.float32)
+        else:
+            x = jnp.sign(jax.random.normal(key, (1, *g.input_hw, g.input_ch)))
+        dep = prog.quantize(prog.init(jax.random.PRNGKey(1)), calib=x)
+        got = np.asarray(dep.forward(x, backend="bitsim"))
+        want = np.asarray(dep.forward(x, backend="ref"))
+        exact = bool((got == want).all())
+        print(f"[sim-check] {name}: bitsim==ref {'OK' if exact else 'MISMATCH'}")
+        failures += 0 if exact else 1
+        if g.is_temporal:
+            session = dep.stream(batch=1, backend="bitsim")
+            for t in range(x.shape[1]):
+                logits = session.step(x[:, t])
+            s_exact = bool((np.asarray(logits) == got).all())
+            print(f"[sim-check] {name}: stream==batch {'OK' if s_exact else 'MISMATCH'}")
+            failures += 0 if s_exact else 1
+    return 1 if failures else 0
+
+
+def _print_tables() -> None:
+    for label, rows in (
+        ("Table 1", table1()),
+        ("DVS/TCN SoA", dvs_tcn_soa_comparison()),
+    ):
+        print(f"== {label} ==")
+        for name, value, paper in rows:
+            ref = "" if paper is None else f"   (paper: {paper})"
+            print(f"  {name:32s} {value:12.4g}{ref}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--silicon", action="store_true",
+                    help="write the nets x corners x sources sweep JSON")
+    ap.add_argument("--bitsim-check", action="store_true",
+                    help="bitsim-vs-ref bit-exactness on the paper-size nets")
+    ap.add_argument("--out", type=Path, default=REPO_ROOT / "BENCH_silicon.json",
+                    help="output path for --silicon")
+    args = ap.parse_args(argv)
+    if args.bitsim_check:
+        return check_bitsim_exactness()
+    if args.silicon:
+        return write_silicon_bench(args.out)
+    _print_tables()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,16 +1,33 @@
 """Bench regression gate: fresh smoke bench vs the committed baseline.
 
-CI's ``bench-smoke`` job regenerates the backend bench in smoke mode, then
-this script compares it against the committed baseline
-(``BENCH_backends.smoke.json`` at the repo root).  The gated metric is the
-**fused/ref speedup ratio** per (net, workload, batch) cell — wall-clock on
-shared CI runners is too noisy to gate absolutely, but the ratio of two
-backends measured in the same process on the same machine cancels the
-machine out.  A cell fails when its fresh ratio degrades more than
-``--tolerance`` (default 30%) below the baseline ratio.
+Two modes:
+
+**Backend mode** (default): CI's ``bench-smoke`` job regenerates the
+backend bench in smoke mode, then this script compares it against the
+committed baseline (``BENCH_backends.smoke.json`` at the repo root).  The
+gated metric is the **fused/ref speedup ratio** per (net, workload, batch)
+cell — wall-clock on shared CI runners is too noisy to gate absolutely,
+but the ratio of two backends measured in the same process on the same
+machine cancels the machine out.  A cell fails when its fresh ratio
+degrades more than ``--tolerance`` (default 30%) below the baseline ratio.
+
+**Silicon mode** (``--silicon``): CI's ``sim-smoke`` job regenerates
+``BENCH_silicon.json`` (`benchmarks/paper_tables.py --silicon` — a
+deterministic model sweep, no wall-clock) and this script gates
+
+  * analytic-vs-sim **cycle divergence** per (net, V): for nets the
+    analytic formula can schedule (``analytic_schedulable``), the sim's
+    cycles may exceed the analytic cycles by at most ``--sim-tolerance``
+    (default 15%) and must never undercut them (the sim only adds
+    fill/drain); non-schedulable nets (5x5 stem, >96-channel tiling) are
+    reported but exempt — their divergence is the *point*;
+  * **drift vs the committed baseline**: shared (net, V, source) cells
+    must agree with the baseline cycles within ``--drift`` (default 1% —
+    the sweep is deterministic, so any real model change trips this and
+    forces a reviewed baseline refresh).
 
     python scripts/check_bench_regression.py BENCH_backends.smoke.json fresh.json
-    python scripts/check_bench_regression.py baseline.json fresh.json --tolerance 0.5
+    python scripts/check_bench_regression.py --silicon BENCH_silicon.json fresh.json
 
 Exit codes: 0 ok, 1 regression, 2 unusable inputs (missing cells/files).
 """
@@ -61,6 +78,61 @@ def compare(baseline: dict, fresh: dict, tolerance: float, backend: str = "fused
     return failures, lines, shared, missing, extra
 
 
+def silicon_cells(payload: dict) -> dict:
+    """{(net, v, source): row} for one BENCH_silicon JSON."""
+    return {
+        (r["net"], r["v"], r["source"]): r for r in payload.get("results", [])
+    }
+
+
+def check_silicon(baseline: dict, fresh: dict, sim_tolerance: float,
+                  drift: float) -> int:
+    """Gate the silicon-model sweep — see module docstring, silicon mode."""
+    base_cells = silicon_cells(baseline)
+    fresh_cells = silicon_cells(fresh)
+    failures = []
+    # 1) analytic-vs-sim cycle reconciliation inside the fresh sweep
+    keys = sorted({(net, v) for (net, v, _src) in fresh_cells})
+    for net, v in keys:
+        analytic = fresh_cells.get((net, v, "analytic"))
+        sim = fresh_cells.get((net, v, "sim"))
+        if analytic is None or sim is None:
+            failures.append(f"{net}@{v}V: missing analytic or sim row")
+            continue
+        div = sim["cycles"] / analytic["cycles"] - 1.0
+        schedulable = sim.get("analytic_schedulable", True)
+        tag = "gated" if schedulable else "exempt (analytic cannot schedule)"
+        print(f"[silicon-gate] {net}@{v}V: sim/analytic cycles "
+              f"{sim['cycles']}/{analytic['cycles']} (divergence {div:+.1%}, {tag})")
+        if schedulable and not (0.0 <= div <= sim_tolerance):
+            failures.append(
+                f"{net}@{v}V: sim-vs-analytic cycle divergence {div:+.1%} "
+                f"outside [0, {sim_tolerance:.0%}]"
+            )
+    # 2) drift vs the committed baseline (deterministic sweep)
+    shared = sorted(set(base_cells) & set(fresh_cells))
+    for key in shared:
+        b, f = base_cells[key]["cycles"], fresh_cells[key]["cycles"]
+        if abs(f / b - 1.0) > drift:
+            net, v, src = key
+            failures.append(
+                f"{net}@{v}V/{src}: cycles drifted vs baseline {b} -> {f} "
+                f"(>{drift:.0%}); if intended, refresh BENCH_silicon.json "
+                "(python benchmarks/paper_tables.py --silicon) and commit"
+            )
+    if not shared:
+        print("[silicon-gate] no shared cells with baseline — refresh the "
+              "committed BENCH_silicon.json", file=sys.stderr)
+        return 2
+    if failures:
+        for f in failures:
+            print(f"[silicon-gate] FAIL {f}", file=sys.stderr)
+        return 1
+    print(f"[silicon-gate] {len(shared)} cells match baseline within "
+          f"{drift:.0%}; reconciliation within {sim_tolerance:.0%}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("baseline", help="committed baseline JSON")
@@ -70,6 +142,15 @@ def main(argv=None) -> int:
                          "speedup ratio (default 0.30)")
     ap.add_argument("--backend", default="fused",
                     help="backend whose speedup-vs-ref is gated")
+    ap.add_argument("--silicon", action="store_true",
+                    help="gate a BENCH_silicon.json sweep instead of the "
+                         "backend bench")
+    ap.add_argument("--sim-tolerance", type=float, default=0.15,
+                    help="silicon mode: max sim-vs-analytic cycle divergence "
+                         "for analytically-schedulable nets (default 0.15)")
+    ap.add_argument("--drift", type=float, default=0.01,
+                    help="silicon mode: max cycle drift vs the committed "
+                         "baseline (default 0.01)")
     args = ap.parse_args(argv)
 
     try:
@@ -78,6 +159,9 @@ def main(argv=None) -> int:
     except (OSError, json.JSONDecodeError) as e:
         print(f"[bench-gate] cannot read inputs: {e}", file=sys.stderr)
         return 2
+
+    if args.silicon:
+        return check_silicon(baseline, fresh, args.sim_tolerance, args.drift)
 
     failures, lines, shared, missing, extra = compare(
         baseline, fresh, args.tolerance, args.backend

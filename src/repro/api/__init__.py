@@ -37,9 +37,10 @@ from repro.api.graph import (
 from repro.api import quantize
 
 _PROGRAM = ("CutieProgram", "DeployedProgram", "StreamSession", "SiliconReport",
-            "BACKENDS", "check_backend", "export_conv_layers", "silicon_report")
+            "BACKENDS", "SILICON_SOURCES", "check_backend", "export_conv_layers",
+            "silicon_report")
 _REGISTRY = ("register_net", "get_net", "get_graph", "list_nets",
-             "cifar10_tnn_graph", "dvs_cnn_tcn_graph")
+             "cifar10_tnn_graph", "dvs_cnn_tcn_graph", "cifar10_tnn_wide_graph")
 
 __all__ = [
     "CutieGraph", "LayerSpec", "conv2d", "fc", "flatten", "global_pool",

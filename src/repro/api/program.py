@@ -31,11 +31,17 @@ Backends:
                re-ternarized between layers
     interpret  Pallas kernels, interpreter forced — debugging on any host
     ref        pure-jnp oracles from kernels/ref.py — the semantics anchor
+    bitsim     `repro.sim` plan executor: lowers the graph to an explicit
+               `ExecutionPlan` (OCU/C_in tiles, trit-packed weight-memory
+               images) and runs it tile-by-tile — the cycle-counted
+               microarchitecture simulator's functional half, bit-exact
+               vs ref/fused on ternary data
 
-All four produce identical logits — bit-exact for "fused" vs "ref" whenever
-every inter-layer tensor is ternary or a dyadic rational of ternary values
+All five produce identical logits — bit-exact for "fused"/"bitsim" vs "ref"
+whenever every inter-layer tensor is ternary or a dyadic rational of ternary
+values
 (true for all registry nets: their global_pool windows are power-of-two
-sized), since both paths then accumulate exactly in float32 regardless of
+sized), since these paths then accumulate exactly in float32 regardless of
 summation order.  Tested in tests/test_fused_backend.py and gated in CI by
 benchmarks/backend_bench.py; a net whose global_pool mean divides by a
 non-power-of-two could differ in the last ulp at a threshold crossing.
@@ -64,7 +70,8 @@ from repro.core.ternary import clamp_threshold, ste_ternary_acts, ste_ternary_we
 from repro.kernels.ops import ternary_conv2d
 from repro.kernels.ref import ternary_conv2d_ref
 
-BACKENDS = ("fused", "pallas", "ref", "interpret")
+BACKENDS = ("fused", "pallas", "ref", "interpret", "bitsim")
+SILICON_SOURCES = ("analytic", "sim")
 _BN_EPS = 1e-6
 
 
@@ -94,14 +101,27 @@ def _bn_sd(y: jax.Array) -> jax.Array:
     return jnp.std(y.astype(jnp.float32), axis=tuple(range(y.ndim - 1)))
 
 
+def effective_scale(entry: Dict, fan_in: int) -> jax.Array:
+    """THE per-OCU effective-scale fold: calibration BN std folded into the
+    TWN alpha, or a 1/sqrt(fan-in) normalization without calibration.  Every
+    consumer — the deploy interpreter below AND the simulator's
+    `repro.sim.memory.WeightMemory` — must fold through this one function:
+    the bitsim-vs-ref bit-exactness contract rides on the constants being
+    the same float32 values."""
+    if "bn_sd" in entry:
+        return entry["scale"] / (entry["bn_sd"] + _BN_EPS)
+    return entry["scale"] / jnp.sqrt(float(fan_in))
+
+
 def _ternarize(y: jax.Array, threshold: float) -> jax.Array:
     return jnp.where(jnp.abs(y) > threshold, jnp.sign(y), 0.0)
 
 
 def _dispatch_conv(x, packed, eff_scale, backend: str, *,
-                   threshold: float = 0.5, pool: int = 0):
+                   threshold=0.5, pool: int = 0):
     """One SAME ternary conv through the selected backend.  ``x`` must
-    already be channel-padded to 4 * packed.shape[2].
+    already be channel-padded to 4 * packed.shape[2].  ``threshold`` is a
+    scalar or per-channel [C_out] vector (the ThFU comparator constants).
 
     The "fused" backend runs the whole CUTIE layer — conv, per-OCU scale,
     threshold unit, optional ``pool``-window max-pool — in a single Pallas
@@ -146,7 +166,7 @@ class CutieProgram:
 
     # -- parameters --------------------------------------------------------
 
-    def init(self, key: jax.Array, learn_thresholds: bool = False) -> Dict:
+    def init(self, key: jax.Array, learn_thresholds=False) -> Dict:
         """Kaiming-style float params, grouped by kind:
         {"conv": [{"w"}...], "tcn": [{"w"}...], "fc": {"w"}} (keys only for
         kinds the graph contains — layout shared with the legacy model).
@@ -157,7 +177,12 @@ class CutieProgram:
         `core.ternary.clamp_threshold`) instead of the static threshold and
         the STE threshold gradient makes them trainable; ``quantize()``
         folds the trained values into the packed deploy tables
-        (`api.quantize.resolve_deploy_thresholds`)."""
+        (`api.quantize.resolve_deploy_thresholds`).
+
+        ``learn_thresholds="per_channel"`` makes each layer's threshold a
+        [c_out] *vector* — one comparator constant per OCU, which the fused
+        kernel epilogue (and bitsim) consume as a per-channel threshold
+        operand at deploy time."""
         g = self.graph
         convs = [l for l in g.layers if l.kind == "conv2d"]
         tcns = [l for l in g.layers if l.kind == "tcn"]
@@ -190,14 +215,23 @@ class CutieProgram:
         if fcs:
             (l,) = fcs
             p["fc"] = {"w": jax.random.normal(k_fc, (l.c_in, l.c_out)) * 0.05}
+        if learn_thresholds not in (False, True, "per_channel"):
+            raise ValueError(
+                f"learn_thresholds={learn_thresholds!r}; expected False, True "
+                "or 'per_channel'"
+            )
         if learn_thresholds:
-            # one DISTINCT buffer per layer (a shared one breaks donation)
-            t0 = lambda: jnp.full((), self.graph.act_threshold, jnp.float32)
+            # one DISTINCT buffer per layer (a shared one breaks donation);
+            # "per_channel" widens each to a per-OCU [c_out] vector
+            per_ch = learn_thresholds == "per_channel"
+            t0 = lambda l: jnp.full(
+                (l.c_out,) if per_ch else (), self.graph.act_threshold, jnp.float32
+            )
             p["thresh"] = {}
             if convs:
-                p["thresh"]["conv"] = [t0() for _ in convs]
+                p["thresh"]["conv"] = [t0(l) for l in convs]
             if tcns:
-                p["thresh"]["tcn"] = [t0() for _ in tcns]
+                p["thresh"]["tcn"] = [t0(l) for l in tcns]
         return p
 
     # -- QAT interpreter ---------------------------------------------------
@@ -370,10 +404,14 @@ class CutieProgram:
 
     # -- silicon model -----------------------------------------------------
 
-    def silicon_report(self, v: float = 0.5, hw: Optional[arch.CutieHW] = None) -> "SiliconReport":
-        """Analytical cycles/energy for this graph at supply ``v`` — see
-        module-level `silicon_report` (the Table-1 loop)."""
-        return silicon_report(self.graph, v=v, hw=hw)
+    def silicon_report(
+        self, v: float = 0.5, hw: Optional[arch.CutieHW] = None,
+        source: str = "analytic",
+    ) -> "SiliconReport":
+        """Cycles/energy for this graph at supply ``v`` — see module-level
+        `silicon_report` (the Table-1 loop).  ``source="sim"`` prices the
+        `repro.sim` execution plan instead of the closed formula."""
+        return silicon_report(self.graph, v=v, hw=hw, source=source)
 
 
 @dataclasses.dataclass
@@ -392,9 +430,23 @@ class DeployedProgram:
     # -- per-layer-kind execution -----------------------------------------
 
     def _eff_scale(self, entry: Dict, fan_in: int) -> jax.Array:
-        if "bn_sd" in entry:
-            return entry["scale"] / (entry["bn_sd"] + _BN_EPS)
-        return entry["scale"] / jnp.sqrt(float(fan_in))
+        return effective_scale(entry, fan_in)
+
+    def _bitsim(self):
+        """The lazily-built `repro.sim.PlanExecutor` behind backend="bitsim":
+        graph lowered to an `ExecutionPlan`, packed tables bound as
+        weight-memory images.  Cached — lowering is pure and the tables are
+        immutable once quantized."""
+        ex = getattr(self, "_bitsim_exec", None)
+        if ex is None:
+            from repro.sim import PlanExecutor
+
+            ex = self._bitsim_exec = PlanExecutor.for_deployed(self)
+        return ex
+
+    def execution_plan(self):
+        """This program's compiled `ExecutionPlan` (see `repro.sim.plan`)."""
+        return self._bitsim().plan
 
     def _fc(self, x: jax.Array) -> jax.Array:
         fc = self.tables["fc"]
@@ -417,6 +469,8 @@ class DeployedProgram:
         one kernel launch (conv+scale+ternarize, plus the following pool
         layer sunk into the epilogue) emitting int8 ternary activations —
         the pool LayerSpec it absorbed is then skipped here."""
+        if backend == "bitsim":
+            return self._bitsim().spatial_forward(x)
         g = self.graph
         ci = 0
         fused_pools = 0
@@ -453,6 +507,8 @@ class DeployedProgram:
     def temporal_forward(self, feats: jax.Array, backend: str = "pallas") -> jax.Array:
         """TCN head over the ordered window [B, T, C] -> logits, via the §4
         mapping + the 2-D conv kernel (SAME pad adjusted to causal)."""
+        if backend == "bitsim":
+            return self._bitsim().temporal_forward(feats)
         g = self.graph
         x = feats
         for entry, l in zip(self.tables["tcn"], (l for l in g.temporal_layers if l.kind == "tcn")):
@@ -536,10 +592,14 @@ class DeployedProgram:
 
     # -- silicon model -----------------------------------------------------
 
-    def silicon_report(self, v: float = 0.5, hw: Optional[arch.CutieHW] = None) -> "SiliconReport":
-        """Analytical cycles/energy for the deployed graph at supply ``v``
-        — see module-level `silicon_report` (the Table-1 loop)."""
-        return silicon_report(self.graph, v=v, hw=hw)
+    def silicon_report(
+        self, v: float = 0.5, hw: Optional[arch.CutieHW] = None,
+        source: str = "analytic",
+    ) -> "SiliconReport":
+        """Cycles/energy for the deployed graph at supply ``v`` — see
+        module-level `silicon_report` (the Table-1 loop).  ``source="sim"``
+        prices the same `ExecutionPlan` the bitsim backend executes."""
+        return silicon_report(self.graph, v=v, hw=hw, source=source)
 
 
 class StreamSession:
@@ -617,49 +677,34 @@ class StreamSession:
 # ---------------------------------------------------------------------------
 
 def export_conv_layers(
-    graph: CutieGraph, repeat_frontend: Optional[int] = None
+    graph: CutieGraph,
+    repeat_frontend: Optional[int] = None,
+    hw: Optional[arch.CutieHW] = None,
 ) -> List[arch.ConvLayer]:
-    """Lower the graph to the cycle-accurate layer list of the silicon model.
+    """Lower the graph to the layer list of the analytic silicon model.
 
-    Temporal graphs count ``passes_per_inference`` frontend passes per
-    classification (the TCN memory makes the remaining window steps free);
-    TCN layers appear in their §4 mapped 2-D form [ceil(T/D), D].
+    Since the `repro.sim` subsystem, this is a thin view over THE one
+    lowering path: `sim.lower` compiles the graph into an `ExecutionPlan`
+    (where tiling and kernel-size handling live) and
+    `ExecutionPlan.to_arch_layers` projects it onto `arch.ConvLayer` rows —
+    temporal graphs count ``passes_per_inference`` frontend passes per
+    classification, TCN layers appear in their §4 mapped 2-D form
+    [ceil(T/D), D].  A non-default ``hw`` (smaller OCU array, wider
+    ``max_cin``) re-tiles the schedule accordingly.
     """
-    g = graph
-    h, w = g.input_hw
-    flat_hw: Optional[Tuple[int, int]] = None
-    c_now = g.input_ch
-    frontend: List[arch.ConvLayer] = []
-    head: List[arch.ConvLayer] = []
-    for l in g.layers:
-        if l.kind == "conv2d":
-            frontend.append(arch.ConvLayer(h, w, l.c_in, l.c_out, kh=l.kernel[0], kw=l.kernel[1]))
-            c_now = l.c_out
-        elif l.kind == "pool":
-            h, w = h // l.window, w // l.window
-        elif l.kind == "global_pool":
-            h = w = 1
-        elif l.kind == "flatten":
-            flat_hw = (h, w)
-            h = w = 1
-        elif l.kind == "tcn":
-            head.append(arch.ConvLayer(-(-g.tcn_steps // l.dilation), l.dilation, l.c_in, l.c_out))
-            c_now = l.c_out
-        elif l.kind == "fc":
-            kh, kw = flat_hw if flat_hw is not None else (1, 1)
-            head.append(arch.ConvLayer(1, 1, c_now, l.c_out, kh=kh, kw=kw, is_fc=True))
-    passes = repeat_frontend if repeat_frontend is not None else (
-        g.passes_per_inference if g.is_temporal else 1
-    )
-    return frontend * passes + head
+    from repro.sim.plan import lower
+
+    return lower(graph, hw).to_arch_layers(repeat_frontend)
 
 
 @dataclasses.dataclass
 class SiliconReport:
     """The closed loop: graph -> cycles/energy -> paper's measured corner.
 
-    ``ideal`` is the pixel-per-cycle schedule; ``calibrated`` projects it
-    onto the measured silicon through the published (inf/s, uJ) corner, and
+    ``ideal`` is the uncalibrated schedule — the analytic pixel-per-cycle
+    formula (``source="analytic"``) or the `repro.sim` execution plan's
+    counted cycles (``source="sim"``); ``calibrated`` projects it onto the
+    measured silicon through the published (inf/s, uJ) corner, and
     ``calibration.consistent`` is the model's validity check (cycle and
     energy overheads must agree — they do for both paper networks)."""
 
@@ -668,6 +713,7 @@ class SiliconReport:
     ideal: arch.NetReport
     calibration: Optional[arch.Calibration]
     calibrated: Optional[arch.NetReport]
+    source: str = "analytic"
 
     @property
     def report(self) -> arch.NetReport:
@@ -692,7 +738,7 @@ class SiliconReport:
     def summary(self) -> str:
         """Human-readable report block (the launchers print this)."""
         lines = [
-            f"[{self.graph_name} @ {self.v:.2f} V]",
+            f"[{self.graph_name} @ {self.v:.2f} V, {self.source} schedule]",
             f"  peak efficiency : {self.peak_eff_topsw:8.0f} TOp/s/W",
             f"  energy/inference: {self.energy_uj:8.2f} uJ"
             + ("" if self.calibrated is not None else " (ideal schedule)"),
@@ -709,19 +755,41 @@ class SiliconReport:
 
 
 def silicon_report(
-    graph: CutieGraph, v: float = 0.5, hw: Optional[arch.CutieHW] = None
+    graph: CutieGraph, v: float = 0.5, hw: Optional[arch.CutieHW] = None,
+    source: str = "analytic",
 ) -> SiliconReport:
-    """Evaluate the analytical CUTIE model on this graph and, when the graph
+    """Evaluate the CUTIE silicon model on this graph and, when the graph
     carries a published corner, calibrate against it (at the paper's 0.5 V
-    measurement point, as the paper does)."""
+    measurement point, as the paper does).
+
+    ``source`` picks the cycle model: ``"analytic"`` is the closed
+    pixel-per-cycle formula over `export_conv_layers`; ``"sim"`` lowers the
+    graph to its `repro.sim.ExecutionPlan` and ingests the simulator's
+    per-layer cycle counters (`arch.evaluate_network_counts`) — same
+    electrical model, auditable schedule.  The two must reconcile within
+    the gated tolerance (`repro.sim.reconcile`, CI ``sim-smoke``)."""
+    if source not in SILICON_SOURCES:
+        raise ValueError(
+            f"unknown silicon source {source!r}; expected one of {SILICON_SOURCES}"
+        )
     hw = hw or arch.CutieHW()
-    layers = export_conv_layers(graph)
-    ideal = arch.evaluate_network(graph.name, layers, hw, v)
+    if source == "sim":
+        from repro.sim import evaluate_sim
+
+        def _eval(at_v: float) -> arch.NetReport:
+            return evaluate_sim(graph, hw, at_v)
+    else:
+        layers = export_conv_layers(graph, hw=hw)
+
+        def _eval(at_v: float) -> arch.NetReport:
+            return arch.evaluate_network(graph.name, layers, hw, at_v)
+
+    ideal = _eval(v)
     cal = calibrated = None
     if graph.paper_energy_uj is not None and graph.paper_inf_per_s is not None:
-        at_half_volt = arch.evaluate_network(graph.name, layers, hw, 0.5)
-        cal = arch.calibrate(at_half_volt, graph.paper_inf_per_s, graph.paper_energy_uj)
+        cal = arch.calibrate(_eval(0.5), graph.paper_inf_per_s, graph.paper_energy_uj)
         calibrated = arch.apply_calibration(ideal, cal)
     return SiliconReport(
-        graph_name=graph.name, v=v, ideal=ideal, calibration=cal, calibrated=calibrated
+        graph_name=graph.name, v=v, ideal=ideal, calibration=cal,
+        calibrated=calibrated, source=source,
     )

@@ -30,15 +30,17 @@ def resolve_deploy_thresholds(graph, params) -> dict:
 
     When the param pytree carries a ``"thresh"`` group (``CutieProgram.init``
     with ``learn_thresholds=True``, trained through the STE threshold
-    gradient in `core.ternary.ste_ternary_acts`), each learned scalar is
+    gradient in `core.ternary.ste_ternary_acts`), each learned threshold is
     clamped exactly as the QAT forward clamps it and materialized as a
-    Python float — the Pallas fused kernel takes the threshold as a *static*
-    epilogue argument, the silicon analogue being the per-layer comparator
-    constants programmed at network load time.  Without the group, every
-    layer falls back to the graph's static ``act_threshold``.
+    Python float (scalar) or a float32 [c_out] vector
+    (``learn_thresholds="per_channel"``) — the fused kernel's epilogue
+    takes the thresholds as a per-OCU comparator-constant operand, the
+    silicon analogue being the comparator bank programmed at network load
+    time.  Without the group, every layer falls back to the graph's static
+    ``act_threshold``.
 
-    Returns ``{"conv": [t...], "tcn": [t...]}`` with one float per
-    weight-carrying layer of that kind, in layer order.
+    Returns ``{"conv": [t...], "tcn": [t...]}`` with one float (or [c_out]
+    vector) per weight-carrying layer of that kind, in layer order.
     """
     n_conv = sum(l.kind == "conv2d" for l in graph.layers)
     n_tcn = sum(l.kind == "tcn" for l in graph.layers)
@@ -46,9 +48,13 @@ def resolve_deploy_thresholds(graph, params) -> dict:
     if th is None:
         return {"conv": [graph.act_threshold] * n_conv,
                 "tcn": [graph.act_threshold] * n_tcn}
+    def _fold(t):
+        clamped = clamp_threshold(jnp.asarray(t, jnp.float32))
+        return float(clamped) if clamped.ndim == 0 else clamped
+
     return {
-        "conv": [float(clamp_threshold(t)) for t in th.get("conv", [])],
-        "tcn": [float(clamp_threshold(t)) for t in th.get("tcn", [])],
+        "conv": [_fold(t) for t in th.get("conv", [])],
+        "tcn": [_fold(t) for t in th.get("tcn", [])],
     }
 
 

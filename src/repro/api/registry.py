@@ -9,6 +9,10 @@ returned `CutieProgram`.  Seeded with the paper's two benchmark networks:
   * ``dvs_cnn_tcn``  — the hybrid 2-D-CNN + dilated-TCN of [6] (5-layer CNN
     frontend into a 24-step TCN memory, 4 dilated TCN layers, 12-class head).
 
+Plus ``cifar10_tnn_wide`` — a 192-channel, 5x5-stem variant whose schedule
+(C_in/OCU tiling, multi-pass windows) only the `repro.sim` execution plan
+can express; the analytic formula misprices it (see docs/simulator.md).
+
 Legacy aliases ``cutie_cifar10`` / ``cutie_dvs`` map to the same graphs.
 """
 from __future__ import annotations
@@ -149,8 +153,44 @@ def dvs_cnn_tcn_graph(
     )
 
 
+def cifar10_tnn_wide_graph(
+    channels: int = 192,
+    stem_kernel: Tuple[int, int] = (5, 5),
+    n_classes: int = 10,
+    input_hw: Tuple[int, int] = (32, 32),
+    name: str = "cifar10_tnn_wide",
+) -> CutieGraph:
+    """A deliberately *un-analytic* CIFAR variant: a ``stem_kernel`` (5x5)
+    input conv and ``channels`` (192) > the 96-OCU array width.
+
+    The closed-form silicon model prices every layer at one pixel/cycle
+    with a 3x3 window — it cannot express the extra window passes a 5x5
+    kernel needs, and only coarsely tiles the >96-channel layers.  The
+    `repro.sim` `ExecutionPlan` schedules both explicitly (per-tile
+    `TileAssign`s, ``window_passes`` in the counters), which is the point
+    of this net: `sim.reconcile` reports ``analytic_schedulable=False``
+    and a large, *documented* cycle divergence (see docs/simulator.md).
+    ``input_hw`` must be divisible by 8 (three 2x2 pools)."""
+    c = channels
+    h, w = input_hw
+    layers = (
+        conv2d(3, c, kernel=stem_kernel), pool(),
+        conv2d(c, c), pool(),
+        conv2d(c, c), pool(),
+        flatten(), fc((h // 8) * (w // 8) * c, n_classes),
+    )
+    return CutieGraph(
+        name=name,
+        layers=layers,
+        input_hw=input_hw,
+        input_ch=3,
+        n_classes=n_classes,
+    )
+
+
 register_net("cifar10_tnn", cifar10_tnn_graph)
 register_net("dvs_cnn_tcn", dvs_cnn_tcn_graph)
+register_net("cifar10_tnn_wide", cifar10_tnn_wide_graph)
 # legacy config names from configs/cutie_nets.py
 register_net("cutie_cifar10", cifar10_tnn_graph)
 register_net("cutie_dvs", dvs_cnn_tcn_graph)
@@ -163,5 +203,11 @@ register_net(
     "dvs_cnn_tcn_smoke",
     lambda: dvs_cnn_tcn_graph(
         channels=12, input_hw=(32, 32), tcn_steps=8, name="dvs_cnn_tcn_smoke"
+    ),
+)
+register_net(
+    "cifar10_tnn_wide_smoke",
+    lambda: cifar10_tnn_wide_graph(
+        channels=8, input_hw=(16, 16), name="cifar10_tnn_wide_smoke"
     ),
 )

@@ -163,12 +163,15 @@ class NetReport:
     per_layer_util: List[float]
 
 
-def evaluate_network(
-    name: str, layers: Sequence[ConvLayer], hw: CutieHW, v: float
+def _report_from_totals(
+    name: str, v: float, cycles: int, ops: int, utils: List[float], hw: CutieHW
 ) -> NetReport:
+    """The shared electrical core: (cycles, ops, per-layer utils) -> report.
+    Both cycle sources — the closed-form schedule (`evaluate_network`) and
+    the simulator's per-layer counters (`evaluate_network_counts`) — price
+    identically from here, so their reports differ only by their cycle
+    models, which is exactly what the reconciliation gate compares."""
     f = hw.freq_hz(v)
-    cycles = sum(layer_cycles(l, hw) for l in layers)
-    ops = sum(l.ops for l in layers)
     t_inf = cycles / f
     # energy: dynamic energy on *utilized* ops + idle/leak over the inference.
     # CUTIE clock-gates idle OCUs, so dynamic energy tracks useful ops; the
@@ -177,11 +180,10 @@ def evaluate_network(
     e_dyn = ops * hw.e_op_j(v)
     e_leak = hw.leak_w(v) * t_inf
     energy = e_dyn + e_leak
-    utils = [layer_utilization(l, hw) for l in layers]
     avg_tops = ops / t_inf / 1e12
     power = energy / t_inf
     # peak layer: best-utilization layer at full burst rate
-    peak_util = max(utils)
+    peak_util = min(max(utils), 1.0)
     peak_tput_paper = peak_util * hw.ops_per_cycle * f * KAPPA_PAPER_OPS / 1e12
     # peak efficiency: dynamic-only at the best layer (paper's convention —
     # first-layer burst, leakage amortized away)
@@ -203,6 +205,33 @@ def evaluate_network(
         peak_tput_tops_paper=peak_tput_paper,
         per_layer_util=utils,
     )
+
+
+def evaluate_network(
+    name: str, layers: Sequence[ConvLayer], hw: CutieHW, v: float
+) -> NetReport:
+    """The closed-form schedule: per-layer cycles from `layer_cycles`."""
+    cycles = sum(layer_cycles(l, hw) for l in layers)
+    ops = sum(l.ops for l in layers)
+    utils = [layer_utilization(l, hw) for l in layers]
+    return _report_from_totals(name, v, cycles, ops, utils, hw)
+
+
+def evaluate_network_counts(
+    name: str, counts: Sequence, hw: CutieHW, v: float
+) -> NetReport:
+    """Per-layer cycle ingestion: price a network whose cycles were counted
+    externally — each item needs ``.cycles``, ``.ops`` and ``.util``
+    attributes (`repro.sim.counters.LayerCounters` is the producer).  This
+    is how `silicon_report(source="sim")` replaces the aggregate formula
+    with the simulator's explicit schedule while keeping one electrical
+    model."""
+    cycles = sum(int(c.cycles) for c in counts)
+    ops = sum(int(c.ops) for c in counts)
+    utils = [float(c.util) for c in counts if c.cycles > 0]
+    if not utils:
+        raise ValueError(f"{name}: no cycle-bearing layers in counts")
+    return _report_from_totals(name, v, cycles, ops, utils, hw)
 
 
 # ---------------------------------------------------------------------------

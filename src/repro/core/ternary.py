@@ -117,10 +117,19 @@ def _sta_bwd(res, g):
     # hard-tanh style STE window: gradient flows where |x| <= 2*threshold + 1
     dx = jnp.where(jnp.abs(x) <= (2.0 * threshold + 1.0), g, 0.0)
     # d out / d t is exactly -sign(x) * delta(|x| - t); surrogate the delta
-    # with a unit-width rect window around t and sum to the scalar shape.
+    # with a unit-width rect window around t and sum to the threshold shape:
+    # everything for a scalar, the leading (non-channel) axes for a
+    # per-channel [C] threshold vector — each normalized by sqrt of its own
+    # element count so scalar and vector training see the same grad scale.
     near = (jnp.abs(jnp.abs(x) - threshold) <= 0.5).astype(g.dtype)
-    dt = -jnp.sum(g * jnp.sign(x) * near) / jnp.sqrt(jnp.asarray(g.size, g.dtype))
-    return dx, jnp.asarray(dt, dtype=jnp.asarray(threshold).dtype)
+    contrib = g * jnp.sign(x) * near
+    t = jnp.asarray(threshold)
+    if t.ndim == 0:
+        dt = -jnp.sum(contrib) / jnp.sqrt(jnp.asarray(g.size, g.dtype))
+    else:
+        dt = -jnp.sum(contrib, axis=tuple(range(contrib.ndim - t.ndim)))
+        dt = dt.reshape(t.shape) / jnp.sqrt(jnp.asarray(g.size // t.size, g.dtype))
+    return dx, jnp.asarray(dt, dtype=t.dtype)
 
 
 ste_ternary_acts.defvjp(_sta_fwd, _sta_bwd)

@@ -75,7 +75,7 @@ def ternary_matmul(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "block_cout", "fuse_ternary", "threshold", "fuse_pool", "interpret", "out_dtype"
+        "block_cout", "fuse_ternary", "fuse_pool", "interpret", "out_dtype"
     ),
 )
 def ternary_conv2d(
@@ -85,7 +85,7 @@ def ternary_conv2d(
     *,
     block_cout: int = 128,
     fuse_ternary: bool = False,
-    threshold: float = 0.5,
+    threshold=0.5,
     fuse_pool: int = 0,
     interpret: bool | None = None,
     out_dtype=None,
@@ -93,7 +93,9 @@ def ternary_conv2d(
     """SAME ternary conv over [B, H, W, C_in].  With ``fuse_ternary`` (and
     optionally ``fuse_pool``/``out_dtype=jnp.int8``) the whole CUTIE layer —
     conv, threshold unit, pooling — is one kernel launch emitting 2-bit-class
-    ternary activations."""
+    ternary activations.  ``threshold`` is the ThFU comparator constant:
+    a scalar (splatted across OCUs) or a per-channel [C_out] vector — the
+    per-OCU comparator bank programmed at network load time."""
     if interpret is None:
         interpret = _on_cpu()
     kh, kw, c4, c_out = w_packed.shape
@@ -103,9 +105,15 @@ def ternary_conv2d(
     bc = min(block_cout, c_out)
     wp = _pad_to(w_packed, 3, bc)
     sc = _pad_to(scale.reshape(-1), 0, bc)
+    thr = jnp.asarray(threshold, jnp.float32)
+    if thr.ndim == 0:
+        thr = jnp.full((c_out,), thr)
+    elif thr.shape != (c_out,):
+        raise ValueError(f"threshold shape {thr.shape} != ({c_out},)")
+    th = _pad_to(thr, 0, bc)
     y = ternary_conv2d_pallas(
-        x, wp, sc, block_cout=bc, fuse_ternary=fuse_ternary,
-        threshold=threshold, fuse_pool=fuse_pool, interpret=interpret,
+        x, wp, sc, th, block_cout=bc, fuse_ternary=fuse_ternary,
+        fuse_pool=fuse_pool, interpret=interpret,
         out_dtype=out_dtype or x.dtype,
     )
     return y[..., :c_out]

@@ -24,13 +24,15 @@ def ternary_conv2d_ref(
     scale: jax.Array,
     *,
     fuse_ternary: bool = False,
-    threshold: float = 0.5,
+    threshold=0.5,
     fuse_pool: int = 0,
     out_dtype=None,
 ) -> jax.Array:
     """SAME conv with ternary packed weights [KH,KW,C_in/4,C_out] + scale.
-    ``fuse_pool`` > 1 appends a window/stride ``fuse_pool`` max-pool after
-    the optional ternarization — the oracle for the fused kernel epilogue."""
+    ``threshold`` is a scalar or per-channel [C_out] vector (broadcast over
+    pixels); ``fuse_pool`` > 1 appends a window/stride ``fuse_pool``
+    max-pool after the optional ternarization — the oracle for the fused
+    kernel epilogue."""
     w = unpack_ternary(w_packed, axis=2).astype(jnp.float32)
     y = jax.lax.conv_general_dilated(
         x.astype(jnp.float32),
@@ -40,7 +42,7 @@ def ternary_conv2d_ref(
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
     ) * scale.reshape(1, 1, 1, -1).astype(jnp.float32)
     if fuse_ternary:
-        y = jnp.where(jnp.abs(y) > threshold, jnp.sign(y), 0.0)
+        y = jnp.where(jnp.abs(y) > jnp.asarray(threshold, jnp.float32), jnp.sign(y), 0.0)
     if fuse_pool > 1:
         p = fuse_pool
         y = jax.lax.reduce_window(

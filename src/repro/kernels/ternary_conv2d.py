@@ -44,8 +44,8 @@ def _unpack_w(wp: jax.Array, dtype) -> jax.Array:
 
 
 def _tconv_kernel(
-    x_ref, wp_ref, scale_ref, o_ref, acc_ref, *, h: int, w: int, kh: int, kw: int,
-    fuse_ternary: bool, threshold: float, fuse_pool: int,
+    x_ref, wp_ref, scale_ref, thr_ref, o_ref, acc_ref, *, h: int, w: int,
+    kh: int, kw: int, fuse_ternary: bool, fuse_pool: int,
 ):
     """One (sample, output-channel-tile) grid cell: full-image conv."""
     c_in = x_ref.shape[-1]
@@ -66,7 +66,9 @@ def _tconv_kernel(
 
     y = acc_ref[...] * scale_ref[...].astype(jnp.float32)
     if fuse_ternary:
-        y = jnp.where(jnp.abs(y) > threshold, jnp.sign(y), 0.0)
+        # ThFU: per-OCU comparator constants — a (1, bn) threshold row
+        # broadcast over the pixels (scalar thresholds arrive pre-splatted)
+        y = jnp.where(jnp.abs(y) > thr_ref[...].astype(jnp.float32), jnp.sign(y), 0.0)
     if fuse_pool > 1:
         # (h*w, bn) is row-major (h, w, bn): group both spatial axes by the
         # pool window and reduce — the silicon's pooling unit, in-epilogue.
@@ -80,24 +82,26 @@ def _tconv_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "block_cout", "interpret", "fuse_ternary", "threshold", "fuse_pool", "out_dtype"
+        "block_cout", "interpret", "fuse_ternary", "fuse_pool", "out_dtype"
     ),
 )
 def ternary_conv2d_pallas(
     x: jax.Array,
     w_packed: jax.Array,
     scale: jax.Array,
+    threshold: jax.Array,
     *,
     block_cout: int = 128,
     fuse_ternary: bool = False,
-    threshold: float = 0.5,
     fuse_pool: int = 0,
     interpret: bool = True,
     out_dtype=None,
 ):
     """SAME ternary conv.  x: [B, H, W, C_in] (unpadded), w_packed:
-    [KH, KW, C_in/4, C_out] uint8, scale: [C_out].  C_out must be a multiple
-    of ``block_cout`` (ops.py pads).  ``fuse_pool`` > 1 appends a
+    [KH, KW, C_in/4, C_out] uint8, scale: [C_out], threshold: [C_out] —
+    the ThFU's per-OCU comparator constants (ops.py splats a scalar; only
+    read when ``fuse_ternary``).  C_out must be a multiple of
+    ``block_cout`` (ops.py pads).  ``fuse_pool`` > 1 appends a
     window/stride ``fuse_pool`` max-pool to the epilogue (after the optional
     ternarization), shrinking the output to [B, H/p, W/p, C_out]."""
     b, h, w, c_in = x.shape
@@ -110,11 +114,12 @@ def ternary_conv2d_pallas(
     ph, pw = kh // 2, kw // 2
     xp = jnp.pad(x, ((0, 0), (ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
     scale = scale.reshape(1, c_out)
+    thr = threshold.reshape(1, c_out)
     oh, ow = (h // fuse_pool, w // fuse_pool) if fuse_pool > 1 else (h, w)
 
     kern = functools.partial(
         _tconv_kernel, h=h, w=w, kh=kh, kw=kw,
-        fuse_ternary=fuse_ternary, threshold=threshold, fuse_pool=fuse_pool,
+        fuse_ternary=fuse_ternary, fuse_pool=fuse_pool,
     )
     return pl.pallas_call(
         kern,
@@ -123,9 +128,10 @@ def ternary_conv2d_pallas(
             pl.BlockSpec((1, h + kh - 1, w + kw - 1, c_in), lambda i, j: (i, 0, 0, 0)),
             pl.BlockSpec((kh, kw, c4, block_cout), lambda i, j: (0, 0, 0, j)),
             pl.BlockSpec((1, block_cout), lambda i, j: (0, j)),
+            pl.BlockSpec((1, block_cout), lambda i, j: (0, j)),
         ],
         out_specs=pl.BlockSpec((1, oh, ow, block_cout), lambda i, j: (i, 0, 0, j)),
         out_shape=jax.ShapeDtypeStruct((b, oh, ow, c_out), out_dtype),
         scratch_shapes=[pltpu.VMEM((h * w, block_cout), jnp.float32)],
         interpret=interpret,
-    )(xp, w_packed, scale)
+    )(xp, w_packed, scale, thr)

@@ -1,0 +1,205 @@
+"""Cycle/access counting over an `ExecutionPlan` — the sim's cost model.
+
+Where the analytic model (`core.cutie_arch.layer_cycles`) prices a layer
+with one closed formula, this module walks the plan's schedule:
+
+  cycles(layer) = n_tiles * (window_passes * out_pixels + linebuffer_fill)
+                + pipeline_drain
+
+  * ``n_tiles``       — sequential (cout, cin) tile passes (`TileAssign`s);
+    every pass re-streams the input map, so the line buffer re-fills per
+    pass (exactly the analytic formula's per-tile prime term);
+  * ``window_passes`` — ceil(kh/HW.kh) * ceil(kw/HW.kw): a kernel larger
+    than the native OCU window (3x3 on Kraken) needs multiple window passes
+    per output pixel.  THE analytic model assumes 1 pixel/cycle regardless —
+    this is exactly the schedule it cannot express, and why the wide/5x5
+    registry net diverges (reported, not gated; see ``analytic_schedulable``);
+  * ``linebuffer_fill`` — (kh-1) rows must enter the line buffer before the
+    first window fires (the analytic model's fixed 2-row prime at kh=3);
+  * ``pipeline_drain`` — per-layer reconfiguration + adder-tree drain
+    (`SimParams.pipeline_drain_cycles`).
+
+For every 3x3 network the first two terms reduce to the analytic formula,
+so sim and analytic cycles reconcile to within the drain overhead — the
+contract gated at the 0.5 V corner (tests/test_sim.py, CI ``sim-smoke``,
+``scripts/check_bench_regression.py --silicon``).
+
+Access counters come from the memory models (`sim.memory`): packed
+weight-image bytes, double-buffered feature-map words, TCN ring traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+from repro.api.graph import CutieGraph
+from repro.core import cutie_arch as arch
+from repro.sim.memory import FeatureMemory, RingBufferSchedule
+from repro.sim.plan import ExecutionPlan, LayerPlan, lower
+
+
+@dataclasses.dataclass(frozen=True)
+class SimParams:
+    """Sim-specific schedule knobs (the HW electrical model stays in
+    `CutieHW`).  ``pipeline_drain_cycles`` is the per-layer cost of
+    reconfiguring the datapath and draining the OCU pipeline between
+    layers; small against any real layer, but it is what makes the sim a
+    *cycle-approximate* upper model of the ideal analytic schedule."""
+
+    pipeline_drain_cycles: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCounters:
+    """One plan layer, priced."""
+
+    index: int
+    kind: str
+    label: str
+    tiles: int
+    window_passes: int
+    cycles: int
+    macs: int
+    util: float
+    wmem_bytes: int
+    fmap_reads: int
+    fmap_writes: int
+
+    @property
+    def ops(self) -> int:
+        return 2 * self.macs  # 1 MAC = 2 Op, the paper's footnote
+
+
+def _window_passes(lp: LayerPlan, hw: arch.CutieHW) -> int:
+    if lp.kind not in ("conv2d", "tcn"):
+        return 1
+    return -(-lp.kh // hw.kh) * (-(-lp.kw // hw.kw))
+
+
+def _layer_cycles(lp: LayerPlan, hw: arch.CutieHW, params: SimParams) -> int:
+    if lp.kind in ("conv2d", "tcn"):
+        fill = (lp.kh - 1) * lp.w
+        compute = len(lp.tiles) * (_window_passes(lp, hw) * lp.out_pixels + fill)
+        return compute + params.pipeline_drain_cycles
+    if lp.kind == "fc":
+        return len(lp.tiles) + params.pipeline_drain_cycles
+    return 0  # pool/global_pool/flatten/last_step: in-pipeline or addressing
+
+
+def _wmem_bytes(lp: LayerPlan) -> int:
+    if lp.kind in ("conv2d", "tcn"):
+        return lp.kh * lp.kw * (lp.c_pad // 4) * lp.c_out
+    if lp.kind == "fc":
+        return (lp.c_pad // 4) * lp.c_out
+    return 0
+
+
+def count_plan(
+    plan: ExecutionPlan,
+    hw: Optional[arch.CutieHW] = None,
+    params: Optional[SimParams] = None,
+) -> List[LayerCounters]:
+    """Price every plan layer.  Purely static — no execution, no weights."""
+    hw = hw or arch.CutieHW()
+    params = params or SimParams()
+    fmem = FeatureMemory(max_cin=hw.max_cin)
+    out: List[LayerCounters] = []
+    for lp in plan.layers:
+        cycles = _layer_cycles(lp, hw, params)
+        traffic = fmem.layer_traffic(lp)
+        util = (lp.macs / (cycles * hw.ops_per_cycle / 2)) if cycles else 0.0
+        out.append(LayerCounters(
+            index=lp.index,
+            kind=lp.kind,
+            label=f"{lp.kind}@{lp.h}x{lp.w} {lp.c_in}->{lp.c_out} k{lp.kh}x{lp.kw}",
+            tiles=len(lp.tiles),
+            window_passes=_window_passes(lp, hw),
+            cycles=cycles,
+            macs=lp.macs,
+            util=util,
+            wmem_bytes=_wmem_bytes(lp),
+            fmap_reads=traffic["reads"],
+            fmap_writes=traffic["writes"],
+        ))
+    return out
+
+
+def inference_counts(
+    plan: ExecutionPlan,
+    hw: Optional[arch.CutieHW] = None,
+    params: Optional[SimParams] = None,
+) -> List[LayerCounters]:
+    """Per-classification sequence: frontend counters repeated once per
+    frontend pass (the TCN ring makes the other window steps free), then
+    the head — the exact analogue of `export_conv_layers`' repetition."""
+    counts = count_plan(plan, hw, params)
+    spatial = counts[: plan.n_spatial]
+    head = counts[plan.n_spatial :]
+    return spatial * plan.passes_per_inference + head
+
+
+def analytic_schedulable(plan: ExecutionPlan, hw: Optional[arch.CutieHW] = None) -> bool:
+    """True when every kernel fits the native OCU window — the regime where
+    the analytic pixel-per-cycle formula is a valid schedule and the
+    reconciliation gate applies."""
+    hw = hw or arch.CutieHW()
+    return all(_window_passes(lp, hw) == 1 for lp in plan.layers)
+
+
+def evaluate_sim(
+    graph: CutieGraph,
+    hw: Optional[arch.CutieHW] = None,
+    v: float = 0.5,
+    params: Optional[SimParams] = None,
+) -> arch.NetReport:
+    """The sim-side twin of `arch.evaluate_network`: lower -> count ->
+    ingest per-layer cycles into the electrical model."""
+    hw = hw or arch.CutieHW()
+    plan = lower(graph, hw)
+    counts = inference_counts(plan, hw, params)
+    return arch.evaluate_network_counts(graph.name, counts, hw, v)
+
+
+def reconcile(
+    graph: CutieGraph,
+    hw: Optional[arch.CutieHW] = None,
+    v: float = 0.5,
+    params: Optional[SimParams] = None,
+) -> dict:
+    """Sim-vs-analytic cycle reconciliation for one graph.
+
+    ``divergence`` = sim_cycles / analytic_cycles - 1.  Non-negative by
+    construction for schedulable nets (the sim only *adds* fill/drain); the
+    gate bounds it from above.  ``analytic_schedulable`` False marks nets
+    whose schedule the formula cannot express (kernel > native window) —
+    divergence is reported but not gated there."""
+    hw = hw or arch.CutieHW()
+    plan = lower(graph, hw)
+    sim = arch.evaluate_network_counts(
+        graph.name, inference_counts(plan, hw, params), hw, v
+    )
+    analytic = arch.evaluate_network(
+        graph.name, plan.to_arch_layers(), hw, v
+    )
+    return {
+        "net": graph.name,
+        "v": v,
+        "sim_cycles": sim.cycles,
+        "analytic_cycles": analytic.cycles,
+        "divergence": sim.cycles / analytic.cycles - 1.0,
+        "analytic_schedulable": analytic_schedulable(plan, hw),
+        "ring": dataclasses.asdict(RingBufferSchedule.for_plan(plan))
+        if plan.feature_channels else None,
+    }
+
+
+def counts_summary(counts: Sequence[LayerCounters]) -> dict:
+    """Aggregate totals for reports/benches."""
+    return {
+        "cycles": sum(c.cycles for c in counts),
+        "macs": sum(c.macs for c in counts),
+        "ops": sum(c.ops for c in counts),
+        "wmem_bytes": sum(c.wmem_bytes for c in counts),
+        "fmap_reads": sum(c.fmap_reads for c in counts),
+        "fmap_writes": sum(c.fmap_writes for c in counts),
+    }

@@ -1,0 +1,241 @@
+"""Memory models of the CUTIE instance: weight SCMs, feature SRAMs, TCN ring.
+
+`WeightMemory` materializes the plan's **trit-packed weight-memory images**
+from a `DeployedProgram`'s tables — the exact bytes `api.quantize` packed
+(THE single pack path; no re-quantization happens here), sliced per
+`TileAssign` at execution time.  It also carries the per-OCU effective
+scales (BN folded, computed with the deploy interpreter's own formula so
+bitsim stays bit-exact) and the per-layer activation thresholds — scalar or
+per-channel vector, exactly what the fused kernel epilogue receives.
+
+`FeatureMemory` models the double-buffered activation memories: two banks of
+2-bit activation words; layer N reads its input map from one bank while
+writing its output to the other, so there is no structural stall — the cost
+is the *traffic*, which `sim.counters` reports per layer.
+
+`RingBufferSchedule` is the 24-step TCN ring (the 576 B SCM shift register):
+one push per frontend pass, a full ordered-window read per TCN-head layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Union
+
+import jax
+import numpy as np
+
+from repro.api.program import effective_scale
+from repro.core.ternary import pack_ternary
+from repro.sim.plan import ExecutionPlan, LayerPlan
+
+Threshold = Union[float, np.ndarray]
+
+
+@dataclasses.dataclass
+class LayerImage:
+    """One weight layer's memory image + folded epilogue constants.
+
+    ``packed``: conv/tcn [KH, KW, C_pad/4, C_out] uint8 (4 trits/byte along
+    C_in — `api.quantize.quantize_pack_conv_weights`' layout, byte-identical
+    to the deploy tables); fc [ceil(K/4), N] uint8 packed along the fan-in.
+    ``eff_scale``: float32 [C_out] per-OCU scale with BN statistics folded —
+    computed with the same expression as `DeployedProgram._eff_scale`.
+    ``threshold``: the ThFU comparator constant(s) — scalar or [C_out]."""
+
+    kind: str
+    index: int
+    packed: np.ndarray
+    eff_scale: np.ndarray
+    threshold: Threshold
+    dilation: int = 1
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.packed.size)
+
+    def to_dict(self) -> dict:
+        thr = self.threshold
+        return {
+            "kind": self.kind,
+            "index": self.index,
+            "packed_shape": list(self.packed.shape),
+            "packed": self.packed.reshape(-1).tolist(),
+            "eff_scale": np.asarray(self.eff_scale).tolist(),
+            "threshold": np.asarray(thr).tolist() if np.ndim(thr) else float(thr),
+            "dilation": self.dilation,
+        }
+
+    @staticmethod
+    def from_dict(d: dict) -> "LayerImage":
+        thr = d["threshold"]
+        return LayerImage(
+            kind=d["kind"],
+            index=d["index"],
+            packed=np.array(d["packed"], np.uint8).reshape(d["packed_shape"]),
+            eff_scale=np.array(d["eff_scale"], np.float32),
+            threshold=np.array(thr, np.float32) if isinstance(thr, list) else float(thr),
+            dilation=d["dilation"],
+        )
+
+
+def _eff_scale(entry: Dict, fan_in: int) -> np.ndarray:
+    """The deploy interpreter's own fold (`api.program.effective_scale`),
+    materialized — the constants are bitwise those of the ref/fused
+    backends because they come from the same function."""
+    return np.asarray(effective_scale(entry, fan_in), np.float32).reshape(-1)
+
+
+@dataclasses.dataclass
+class WeightMemory:
+    """All weight-layer images of one plan, in plan order (conv* tcn* fc?).
+
+    ``fc_scale`` is the OPU's per-class scale, applied *after* the integer
+    trit dot (`DeployedProgram._fc`'s accumulate-then-scale order)."""
+
+    images: List[LayerImage]
+    fc_scale: Optional[np.ndarray] = None
+
+    @staticmethod
+    def from_tables(plan: ExecutionPlan, tables: Dict,
+                    act_threshold: float) -> "WeightMemory":
+        # the images are constants of the program, never traced values —
+        # but this constructor may run lazily inside a jit trace (the
+        # executor is built on first forward), so force the folding
+        # arithmetic to evaluate at compile time
+        with jax.ensure_compile_time_eval():
+            return WeightMemory._from_tables(plan, tables, act_threshold)
+
+    @staticmethod
+    def _from_tables(plan: ExecutionPlan, tables: Dict,
+                     act_threshold: float) -> "WeightMemory":
+        images: List[LayerImage] = []
+        fc_scale = None
+        ci = ti = 0
+        for lp in plan.weight_layers():
+            if lp.kind == "conv2d":
+                entry = tables["conv"][ci]
+                ci += 1
+                c_pad = 4 * entry["packed"].shape[2]
+                images.append(LayerImage(
+                    kind="conv2d", index=lp.index,
+                    packed=np.asarray(entry["packed"], np.uint8),
+                    eff_scale=_eff_scale(entry, lp.kh * lp.kw * c_pad),
+                    threshold=entry.get("threshold", act_threshold),
+                ))
+            elif lp.kind == "tcn":
+                entry = tables["tcn"][ti]
+                ti += 1
+                images.append(LayerImage(
+                    kind="tcn", index=lp.index,
+                    packed=np.asarray(entry["packed"], np.uint8),
+                    eff_scale=_eff_scale(entry, lp.taps * lp.c_in),
+                    threshold=entry.get("threshold", act_threshold),
+                    dilation=entry["dilation"],
+                ))
+            elif lp.kind == "fc":
+                entry = tables["fc"]
+                t = np.asarray(entry["t"], np.int8)
+                k = t.shape[0]
+                # pack with the SAME codec as every other image (4 trits/byte)
+                t_pad = np.pad(t, ((0, (-k) % 4), (0, 0)))
+                images.append(LayerImage(
+                    kind="fc", index=lp.index,
+                    packed=np.asarray(pack_ternary(t_pad, axis=0), np.uint8),
+                    eff_scale=np.asarray(entry["scale"], np.float32).reshape(-1),
+                    threshold=0.0,
+                ))
+                fc_scale = images[-1].eff_scale
+        return WeightMemory(images=images, fc_scale=fc_scale)
+
+    def image_for(self, lp: LayerPlan) -> LayerImage:
+        for img in self.images:
+            if img.index == lp.index:
+                return img
+        raise KeyError(f"no weight image for plan layer {lp.index} ({lp.kind})")
+
+    @property
+    def nbytes(self) -> int:
+        return sum(img.nbytes for img in self.images)
+
+    def to_dict(self) -> dict:
+        return {"images": [img.to_dict() for img in self.images]}
+
+    @staticmethod
+    def from_dict(d: dict) -> "WeightMemory":
+        images = [LayerImage.from_dict(i) for i in d["images"]]
+        fc = next((i.eff_scale for i in images if i.kind == "fc"), None)
+        return WeightMemory(images=images, fc_scale=fc)
+
+
+# ---------------------------------------------------------------------------
+# Feature memories (double-buffered) and the TCN ring — traffic models
+# ---------------------------------------------------------------------------
+
+ACT_BITS = 2  # ternary activations: 2 bits each (the silicon's memory model)
+
+
+def fmap_bytes(h: int, w: int, c: int) -> int:
+    """Bytes of one 2-bit activation map — what one feature-memory bank
+    must hold for the layer to be double-bufferable."""
+    return h * w * ((c * ACT_BITS + 7) // 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureMemory:
+    """Double-buffered activation memory: layer N streams its input from
+    bank A while writing bank B, so compute never stalls on the memory —
+    the schedule cost is pure traffic, counted per layer below.
+
+    Words are pixel-vectors: one word = one pixel's channel slice (at most
+    ``max_cin`` channels x 2 bit)."""
+
+    max_cin: int
+
+    def layer_traffic(self, lp: LayerPlan) -> dict:
+        """{reads, writes} in pixel-vector words for one plan layer.
+
+        conv/tcn: every tile pass streams the input map once through the
+        line buffer (h*w words per tile), and each cout-tile group writes
+        the (post-pool) output map once.  Pool/global_pool/flatten are
+        addressing-only on the read side; fc reads its input vector once
+        and writes the logits."""
+        if lp.kind in ("conv2d", "tcn"):
+            n_tiles = max(len(lp.tiles), 1)
+            cout_groups = len({(t.cout_lo, t.cout_hi) for t in lp.tiles}) or 1
+            out_pix = lp.out_pixels // (lp.pool * lp.pool) if lp.pool else lp.out_pixels
+            return {"reads": n_tiles * lp.h * lp.w, "writes": cout_groups * out_pix}
+        if lp.kind in ("pool", "global_pool"):
+            return {"reads": lp.h * lp.w, "writes": 1 if lp.kind == "global_pool"
+                    else (lp.h // lp.pool) * (lp.w // lp.pool)}
+        if lp.kind == "fc":
+            return {"reads": -(-lp.c_in // self.max_cin), "writes": 1}
+        return {"reads": 0, "writes": 0}
+
+
+@dataclasses.dataclass(frozen=True)
+class RingBufferSchedule:
+    """The TCN memory schedule: ``steps`` x ``channels`` x 2 bit ring
+    (24 x 96 x 2 b = 576 B on Kraken).  One push per frontend pass; every
+    TCN-head layer reads the full ordered window once per classification."""
+
+    steps: int
+    channels: int
+    pushes_per_inference: int
+
+    @property
+    def nbytes(self) -> int:
+        return self.steps * ((self.channels * ACT_BITS + 7) // 8)
+
+    def window_reads(self, n_tcn_layers: int) -> int:
+        """Ordered-window reads (in pixel-vector words) per classification."""
+        return n_tcn_layers * self.steps
+
+    @staticmethod
+    def for_plan(plan: ExecutionPlan) -> Optional["RingBufferSchedule"]:
+        if not plan.feature_channels:
+            return None
+        return RingBufferSchedule(
+            steps=plan.tcn_steps,
+            channels=plan.feature_channels,
+            pushes_per_inference=plan.passes_per_inference,
+        )
