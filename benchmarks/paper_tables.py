@@ -147,6 +147,10 @@ def silicon_sweep(nets=SILICON_NETS, corners=SILICON_CORNERS):
                     "calibrated": rep.calibrated is not None,
                     "analytic_schedulable": rec["analytic_schedulable"],
                     "divergence_at_0v5": rec["divergence"],
+                    # feature-memory serialization the analytic formula can
+                    # never see — zero for every registry net on the Kraken
+                    # bank geometry (double buffering holds by construction)
+                    "stall_cycles": rec["stall_cycles"],
                 })
     return rows
 
@@ -174,12 +178,14 @@ def write_silicon_bench(out: Path, nets=SILICON_NETS, corners=SILICON_CORNERS) -
 def check_bitsim_exactness(nets=("cifar10_tnn", "dvs_cnn_tcn", "cifar10_tnn_wide")) -> int:
     """CI `sim-smoke` gate: backend="bitsim" must be bit-exact vs "ref" on
     the paper-size registry nets — batch forward everywhere, plus a
-    streamed-vs-batch check on the temporal net.  Returns a nonzero exit
-    code on any mismatch."""
+    streamed-vs-batch check on the temporal net, plus the artifact round
+    trip (assemble -> loads -> bitsim forward with no graph object) landing
+    on the same logits.  Returns a nonzero exit code on any mismatch."""
     import jax
     import jax.numpy as jnp
     import numpy as np
 
+    from repro import artifact
     from repro.api import get_net
 
     failures = 0
@@ -205,6 +211,14 @@ def check_bitsim_exactness(nets=("cifar10_tnn", "dvs_cnn_tcn", "cifar10_tnn_wide
             s_exact = bool((np.asarray(logits) == got).all())
             print(f"[sim-check] {name}: stream==batch {'OK' if s_exact else 'MISMATCH'}")
             failures += 0 if s_exact else 1
+        data = dep.to_artifact_bytes()
+        loaded = artifact.loads(data)
+        a_exact = bool(
+            (np.asarray(loaded.forward(x, backend="bitsim")) == got).all()
+            and artifact.reassemble(artifact.disassemble(data)) == data
+        )
+        print(f"[sim-check] {name}: artifact==graph {'OK' if a_exact else 'MISMATCH'}")
+        failures += 0 if a_exact else 1
     return 1 if failures else 0
 
 

@@ -38,7 +38,7 @@ from repro.api import quantize
 
 _PROGRAM = ("CutieProgram", "DeployedProgram", "StreamSession", "SiliconReport",
             "BACKENDS", "SILICON_SOURCES", "check_backend", "export_conv_layers",
-            "silicon_report")
+            "silicon_report", "silicon_report_from_plan")
 _REGISTRY = ("register_net", "get_net", "get_graph", "list_nets",
              "cifar10_tnn_graph", "dvs_cnn_tcn_graph", "cifar10_tnn_wide_graph")
 

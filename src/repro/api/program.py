@@ -590,6 +590,23 @@ class DeployedProgram:
 
         return SessionPool(self, pool_size, backend=backend, **kwargs)
 
+    # -- artifact export (repro.artifact) ----------------------------------
+
+    def to_artifact_bytes(self) -> bytes:
+        """Assemble this program into ``.cutie`` container bytes — the
+        compiled plan + the packed deploy tables, verbatim (see
+        `repro.artifact`).  ``artifact.loads`` gives back a `LoadedProgram`
+        that executes/streams/serves bit-identically with no graph."""
+        from repro.artifact import assemble
+
+        return assemble(self)
+
+    def save_artifact(self, path) -> int:
+        """Write the ``.cutie`` artifact to ``path``; returns byte count."""
+        from repro.artifact import save
+
+        return save(self, path)
+
     # -- silicon model -----------------------------------------------------
 
     def silicon_report(
@@ -598,8 +615,12 @@ class DeployedProgram:
     ) -> "SiliconReport":
         """Cycles/energy for the deployed graph at supply ``v`` — see
         module-level `silicon_report` (the Table-1 loop).  ``source="sim"``
-        prices the same `ExecutionPlan` the bitsim backend executes."""
-        return silicon_report(self.graph, v=v, hw=hw, source=source)
+        prices the same `ExecutionPlan` the bitsim backend executes, with
+        dynamic energy priced on THIS program's packed weight images
+        (sparsity-aware) rather than the ideal dense schedule."""
+        memory = self._bitsim().memory if source == "sim" else None
+        return silicon_report(self.graph, v=v, hw=hw, source=source,
+                              memory=memory)
 
 
 class StreamSession:
@@ -754,9 +775,52 @@ class SiliconReport:
         return "\n".join(lines)
 
 
+def silicon_report_from_plan(
+    plan, v: float = 0.5, hw: Optional[arch.CutieHW] = None,
+    source: str = "analytic", memory=None,
+    paper_energy_uj: Optional[float] = None,
+    paper_inf_per_s: Optional[float] = None,
+) -> SiliconReport:
+    """The graph-free Table-1 loop: price a compiled `ExecutionPlan`
+    directly — what `LoadedProgram.silicon_report` runs on an artifact,
+    where no `CutieGraph` exists.
+
+    ``source="sim"`` counts the plan's schedule (stall counters included);
+    a `repro.sim.WeightMemory` in ``memory`` additionally prices dynamic
+    energy on the program's measured weight sparsity — the golden model
+    runs on the real program, not an ideal.  ``source="analytic"`` projects
+    the plan onto the closed formula.  The paper corner (when given)
+    calibrates at the 0.5 V measurement point, as the paper does."""
+    if source not in SILICON_SOURCES:
+        raise ValueError(
+            f"unknown silicon source {source!r}; expected one of {SILICON_SOURCES}"
+        )
+    hw = hw or arch.CutieHW()
+    if source == "sim":
+        from repro.sim import evaluate_plan
+
+        def _eval(at_v: float) -> arch.NetReport:
+            return evaluate_plan(plan, hw, at_v, memory=memory)
+    else:
+        layers = plan.to_arch_layers()
+
+        def _eval(at_v: float) -> arch.NetReport:
+            return arch.evaluate_network(plan.graph_name, layers, hw, at_v)
+
+    ideal = _eval(v)
+    cal = calibrated = None
+    if paper_energy_uj is not None and paper_inf_per_s is not None:
+        cal = arch.calibrate(_eval(0.5), paper_inf_per_s, paper_energy_uj)
+        calibrated = arch.apply_calibration(ideal, cal)
+    return SiliconReport(
+        graph_name=plan.graph_name, v=v, ideal=ideal, calibration=cal,
+        calibrated=calibrated, source=source,
+    )
+
+
 def silicon_report(
     graph: CutieGraph, v: float = 0.5, hw: Optional[arch.CutieHW] = None,
-    source: str = "analytic",
+    source: str = "analytic", memory=None,
 ) -> SiliconReport:
     """Evaluate the CUTIE silicon model on this graph and, when the graph
     carries a published corner, calibrate against it (at the paper's 0.5 V
@@ -766,30 +830,21 @@ def silicon_report(
     pixel-per-cycle formula over `export_conv_layers`; ``"sim"`` lowers the
     graph to its `repro.sim.ExecutionPlan` and ingests the simulator's
     per-layer cycle counters (`arch.evaluate_network_counts`) — same
-    electrical model, auditable schedule.  The two must reconcile within
-    the gated tolerance (`repro.sim.reconcile`, CI ``sim-smoke``)."""
+    electrical model, auditable schedule, feature-memory stall counters
+    included.  The two must reconcile within the gated tolerance
+    (`repro.sim.reconcile`, CI ``sim-smoke``).  ``memory`` (a
+    `repro.sim.WeightMemory`, sim source only) switches dynamic energy to
+    the program's measured weight sparsity — `DeployedProgram
+    .silicon_report` passes its own packed images through here."""
     if source not in SILICON_SOURCES:
         raise ValueError(
             f"unknown silicon source {source!r}; expected one of {SILICON_SOURCES}"
         )
     hw = hw or arch.CutieHW()
-    if source == "sim":
-        from repro.sim import evaluate_sim
+    from repro.sim.plan import lower
 
-        def _eval(at_v: float) -> arch.NetReport:
-            return evaluate_sim(graph, hw, at_v)
-    else:
-        layers = export_conv_layers(graph, hw=hw)
-
-        def _eval(at_v: float) -> arch.NetReport:
-            return arch.evaluate_network(graph.name, layers, hw, at_v)
-
-    ideal = _eval(v)
-    cal = calibrated = None
-    if graph.paper_energy_uj is not None and graph.paper_inf_per_s is not None:
-        cal = arch.calibrate(_eval(0.5), graph.paper_inf_per_s, graph.paper_energy_uj)
-        calibrated = arch.apply_calibration(ideal, cal)
-    return SiliconReport(
-        graph_name=graph.name, v=v, ideal=ideal, calibration=cal,
-        calibrated=calibrated, source=source,
+    return silicon_report_from_plan(
+        lower(graph, hw), v=v, hw=hw, source=source, memory=memory,
+        paper_energy_uj=graph.paper_energy_uj,
+        paper_inf_per_s=graph.paper_inf_per_s,
     )

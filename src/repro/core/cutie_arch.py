@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 # ---------------------------------------------------------------------------
 # Paper-reported constants (ground truth for validation)
@@ -164,20 +164,26 @@ class NetReport:
 
 
 def _report_from_totals(
-    name: str, v: float, cycles: int, ops: int, utils: List[float], hw: CutieHW
+    name: str, v: float, cycles: int, ops: int, utils: List[float], hw: CutieHW,
+    dyn_ops: Optional[int] = None,
 ) -> NetReport:
     """The shared electrical core: (cycles, ops, per-layer utils) -> report.
     Both cycle sources — the closed-form schedule (`evaluate_network`) and
     the simulator's per-layer counters (`evaluate_network_counts`) — price
     identically from here, so their reports differ only by their cycle
-    models, which is exactly what the reconciliation gate compares."""
+    models, which is exactly what the reconciliation gate compares.
+
+    ``dyn_ops`` (default: ``ops``) is the toggling share dynamic energy is
+    priced on — the sim's sparsity-aware counters pass the non-gated ops of
+    a real program's weight images (zero-trit weights gate their
+    multipliers); throughput/efficiency stay on the physical ``ops``."""
     f = hw.freq_hz(v)
     t_inf = cycles / f
-    # energy: dynamic energy on *utilized* ops + idle/leak over the inference.
+    # energy: dynamic energy on *toggling* ops + idle/leak over the inference.
     # CUTIE clock-gates idle OCUs, so dynamic energy tracks useful ops; the
     # datapath-level overhead (linebuffer, control) is folded into e_op by the
     # calibration at the peak-efficiency point.
-    e_dyn = ops * hw.e_op_j(v)
+    e_dyn = (ops if dyn_ops is None else dyn_ops) * hw.e_op_j(v)
     e_leak = hw.leak_w(v) * t_inf
     energy = e_dyn + e_leak
     avg_tops = ops / t_inf / 1e12
@@ -228,10 +234,13 @@ def evaluate_network_counts(
     model."""
     cycles = sum(int(c.cycles) for c in counts)
     ops = sum(int(c.ops) for c in counts)
+    # producers that carry a sparsity-gated toggling count (the sim's
+    # `LayerCounters.dyn_ops`) price dynamic energy on it; others on ops
+    dyn_ops = sum(int(getattr(c, "dyn_ops", c.ops)) for c in counts)
     utils = [float(c.util) for c in counts if c.cycles > 0]
     if not utils:
         raise ValueError(f"{name}: no cycle-bearing layers in counts")
-    return _report_from_totals(name, v, cycles, ops, utils, hw)
+    return _report_from_totals(name, v, cycles, ops, utils, hw, dyn_ops=dyn_ops)
 
 
 # ---------------------------------------------------------------------------

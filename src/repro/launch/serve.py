@@ -107,14 +107,28 @@ def serve_dvs(args) -> int:
         return 0
 
     n_streams = args.streams or 2 * args.pool
-    prog = get_net(args.net)
-    g = prog.graph
-    params = prog.init(jax.random.PRNGKey(args.seed))
-    pipe = DVSEventPipeline(
-        n_streams, steps=args.frames, hw=g.input_hw[0], seed=args.seed
-    )
-    frames, labels = pipe.next_batch()
-    deployed = prog.quantize(params, calib=frames)
+    if args.program:
+        # fleet path: serve a shipped ``.cutie`` artifact — no CutieGraph,
+        # no quantization; the pool runs what the device would load
+        from repro import artifact
+
+        deployed = artifact.load(args.program)
+        g = deployed.graph  # ProgramInfo — serving metadata only
+        print(f"[serve-dvs] program loaded from {args.program}: {g.name}, "
+              f"{deployed.nbytes} packed weight bytes")
+        pipe = DVSEventPipeline(
+            n_streams, steps=args.frames, hw=g.input_hw[0], seed=args.seed
+        )
+        frames, labels = pipe.next_batch()
+    else:
+        prog = get_net(args.net)
+        g = prog.graph
+        params = prog.init(jax.random.PRNGKey(args.seed))
+        pipe = DVSEventPipeline(
+            n_streams, steps=args.frames, hw=g.input_hw[0], seed=args.seed
+        )
+        frames, labels = pipe.next_batch()
+        deployed = prog.quantize(params, calib=frames)
 
     pool = deployed.serve(
         args.pool, backend=args.backend,
@@ -213,6 +227,9 @@ def main(argv=None):
                     help="dvs: event frames per sensor stream")
     ap.add_argument("--net", default="dvs_cnn_tcn",
                     help="dvs: registry net to serve (e.g. dvs_cnn_tcn_smoke)")
+    ap.add_argument("--program", default=None, metavar="FILE.cutie",
+                    help="dvs: serve a compiled .cutie artifact "
+                         "(repro.artifact) instead of quantizing --net")
     ap.add_argument("--pool", type=int, default=4,
                     help="dvs: SessionPool slots (fixed jitted batch width)")
     ap.add_argument("--streams", type=int, default=0,

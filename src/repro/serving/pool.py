@@ -30,6 +30,15 @@ Key properties (all tested in tests/test_serving.py):
 Empty slots still compute (a zero frame through the CNN) — exactly like the
 silicon, which clocks every OCU whether or not the pixel is useful; the
 occupancy metric reports how much of the batch was real work.
+
+The pool is duck-typed over its program: anything exposing
+``spatial_forward(frames, backend)`` / ``temporal_forward(windows,
+backend)`` and a ``.graph`` metadata object with ``name`` / ``is_temporal``
+/ ``input_hw`` / ``input_ch`` / ``tcn_steps`` / ``feature_channels`` serves
+here.  In practice that is an `api.program.DeployedProgram` (graph-backed)
+or an `artifact.LoadedProgram` (a ``.cutie`` artifact, whose ``.graph`` is
+a `ProgramInfo` header — fleet serving straight from the shipped binary,
+no Python graph object anywhere; tested in tests/test_artifact_loader.py).
 """
 
 from __future__ import annotations

@@ -30,7 +30,9 @@ from repro.sim.counters import (
     LayerCounters,
     SimParams,
     count_plan,
+    evaluate_plan,
     evaluate_sim,
+    inference_counts,
     reconcile,
 )
 
@@ -46,6 +48,8 @@ __all__ = [
     "LayerCounters",
     "SimParams",
     "count_plan",
+    "evaluate_plan",
     "evaluate_sim",
+    "inference_counts",
     "reconcile",
 ]

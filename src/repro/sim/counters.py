@@ -4,7 +4,7 @@ Where the analytic model (`core.cutie_arch.layer_cycles`) prices a layer
 with one closed formula, this module walks the plan's schedule:
 
   cycles(layer) = n_tiles * (window_passes * out_pixels + linebuffer_fill)
-                + pipeline_drain
+                + pipeline_drain + bank_conflict_stalls + ndb_stalls
 
   * ``n_tiles``       — sequential (cout, cin) tile passes (`TileAssign`s);
     every pass re-streams the input map, so the line buffer re-fills per
@@ -17,15 +17,30 @@ with one closed formula, this module walks the plan's schedule:
   * ``linebuffer_fill`` — (kh-1) rows must enter the line buffer before the
     first window fires (the analytic model's fixed 2-row prime at kh=3);
   * ``pipeline_drain`` — per-layer reconfiguration + adder-tree drain
-    (`SimParams.pipeline_drain_cycles`).
+    (`SimParams.pipeline_drain_cycles`);
+  * ``bank_conflict_stalls`` / ``ndb_stalls`` — feature-memory serialization
+    when a layer's maps spill one bank and double buffering breaks
+    (`FeatureMemory.layer_stalls`).  Zero for every registry net on the
+    Kraken bank geometry — the silicon was sized so they never fire — but
+    the counters make the golden model honest about programs that spill
+    (tests force them with a shrunken ``SimParams.fmap_bank_bytes``).
 
-For every 3x3 network the first two terms reduce to the analytic formula,
+For every 3x3 network the non-stall terms reduce to the analytic formula,
 so sim and analytic cycles reconcile to within the drain overhead — the
 contract gated at the 0.5 V corner (tests/test_sim.py, CI ``sim-smoke``,
 ``scripts/check_bench_regression.py --silicon``).
 
 Access counters come from the memory models (`sim.memory`): packed
 weight-image bytes, double-buffered feature-map words, TCN ring traffic.
+
+Sparsity-aware energy: pass a `WeightMemory` (``memory=``) and each
+weight layer's counters carry its static zero-trit fraction
+(`core.ternary.sparsity` over the packed image) and ``dyn_ops`` — the ops
+that actually toggle (a zero weight gates its multiplier).  ``ops`` stays
+the physical 2*MACs for throughput; the electrical model prices dynamic
+energy on ``dyn_ops`` (`arch.evaluate_network_counts`).  This is how
+``silicon_report(source="sim")`` prices a real loaded program, not an
+ideal: `evaluate_plan` takes the artifact's plan + images directly.
 """
 from __future__ import annotations
 
@@ -34,7 +49,12 @@ from typing import List, Optional, Sequence
 
 from repro.api.graph import CutieGraph
 from repro.core import cutie_arch as arch
-from repro.sim.memory import FeatureMemory, RingBufferSchedule
+from repro.sim.memory import (
+    KRAKEN_FMAP_BANK_BYTES,
+    FeatureMemory,
+    RingBufferSchedule,
+    WeightMemory,
+)
 from repro.sim.plan import ExecutionPlan, LayerPlan, lower
 
 
@@ -44,14 +64,26 @@ class SimParams:
     `CutieHW`).  ``pipeline_drain_cycles`` is the per-layer cost of
     reconfiguring the datapath and draining the OCU pipeline between
     layers; small against any real layer, but it is what makes the sim a
-    *cycle-approximate* upper model of the ideal analytic schedule."""
+    *cycle-approximate* upper model of the ideal analytic schedule.
+
+    ``fmap_bank_bytes`` sizes one feature-memory bank (default: the Kraken
+    instance's 98304 B); ``count_stalls`` switches the bank-conflict /
+    non-double-bufferable stall counters (on by default — they are zero
+    whenever double buffering holds, so the default model is unchanged for
+    every registry net)."""
 
     pipeline_drain_cycles: int = 4
+    fmap_bank_bytes: int = KRAKEN_FMAP_BANK_BYTES
+    count_stalls: bool = True
 
 
 @dataclasses.dataclass(frozen=True)
 class LayerCounters:
-    """One plan layer, priced."""
+    """One plan layer, priced.  ``bank_stall_cycles``/``ndb_stall_cycles``
+    are included in ``cycles``; ``w_sparsity`` is the static zero-trit
+    fraction of the layer's weight image (0.0 when counted without a
+    `WeightMemory`) and ``dyn_ops`` the non-gated share of ``ops`` that
+    dynamic energy is priced on."""
 
     index: int
     kind: str
@@ -64,10 +96,23 @@ class LayerCounters:
     wmem_bytes: int
     fmap_reads: int
     fmap_writes: int
+    bank_stall_cycles: int = 0
+    ndb_stall_cycles: int = 0
+    w_sparsity: float = 0.0
 
     @property
     def ops(self) -> int:
         return 2 * self.macs  # 1 MAC = 2 Op, the paper's footnote
+
+    @property
+    def stall_cycles(self) -> int:
+        return self.bank_stall_cycles + self.ndb_stall_cycles
+
+    @property
+    def dyn_ops(self) -> int:
+        """Ops whose multipliers actually toggle: zero-trit weights gate
+        their lanes, so the dynamic-energy share scales with density."""
+        return round(self.ops * (1.0 - self.w_sparsity))
 
 
 def _window_passes(lp: LayerPlan, hw: arch.CutieHW) -> int:
@@ -98,16 +143,25 @@ def count_plan(
     plan: ExecutionPlan,
     hw: Optional[arch.CutieHW] = None,
     params: Optional[SimParams] = None,
+    memory: Optional[WeightMemory] = None,
 ) -> List[LayerCounters]:
-    """Price every plan layer.  Purely static — no execution, no weights."""
+    """Price every plan layer.  Static — no execution; an optional
+    `WeightMemory` adds each weight layer's measured trit sparsity (and
+    thereby ``dyn_ops``) to the counters."""
     hw = hw or arch.CutieHW()
     params = params or SimParams()
-    fmem = FeatureMemory(max_cin=hw.max_cin)
+    fmem = FeatureMemory(max_cin=hw.max_cin, bank_bytes=params.fmap_bank_bytes)
     out: List[LayerCounters] = []
     for lp in plan.layers:
         cycles = _layer_cycles(lp, hw, params)
         traffic = fmem.layer_traffic(lp)
+        stalls = (fmem.layer_stalls(lp) if params.count_stalls
+                  else {"bank_conflict": 0, "ndb": 0})
+        cycles += stalls["bank_conflict"] + stalls["ndb"]
         util = (lp.macs / (cycles * hw.ops_per_cycle / 2)) if cycles else 0.0
+        w_sparsity = 0.0
+        if memory is not None and lp.kind in ("conv2d", "tcn", "fc"):
+            w_sparsity = memory.image_for(lp).weight_sparsity(lp.c_in)
         out.append(LayerCounters(
             index=lp.index,
             kind=lp.kind,
@@ -120,6 +174,9 @@ def count_plan(
             wmem_bytes=_wmem_bytes(lp),
             fmap_reads=traffic["reads"],
             fmap_writes=traffic["writes"],
+            bank_stall_cycles=stalls["bank_conflict"],
+            ndb_stall_cycles=stalls["ndb"],
+            w_sparsity=w_sparsity,
         ))
     return out
 
@@ -128,11 +185,12 @@ def inference_counts(
     plan: ExecutionPlan,
     hw: Optional[arch.CutieHW] = None,
     params: Optional[SimParams] = None,
+    memory: Optional[WeightMemory] = None,
 ) -> List[LayerCounters]:
     """Per-classification sequence: frontend counters repeated once per
     frontend pass (the TCN ring makes the other window steps free), then
     the head — the exact analogue of `export_conv_layers`' repetition."""
-    counts = count_plan(plan, hw, params)
+    counts = count_plan(plan, hw, params, memory)
     spatial = counts[: plan.n_spatial]
     head = counts[plan.n_spatial :]
     return spatial * plan.passes_per_inference + head
@@ -146,18 +204,33 @@ def analytic_schedulable(plan: ExecutionPlan, hw: Optional[arch.CutieHW] = None)
     return all(_window_passes(lp, hw) == 1 for lp in plan.layers)
 
 
+def evaluate_plan(
+    plan: ExecutionPlan,
+    hw: Optional[arch.CutieHW] = None,
+    v: float = 0.5,
+    params: Optional[SimParams] = None,
+    memory: Optional[WeightMemory] = None,
+    name: Optional[str] = None,
+) -> arch.NetReport:
+    """Price a compiled plan directly — the graph-free entry point behind
+    `LoadedProgram.silicon_report`: count -> ingest into the electrical
+    model, with sparsity-aware dynamic energy when ``memory`` is given."""
+    hw = hw or arch.CutieHW()
+    counts = inference_counts(plan, hw, params, memory)
+    return arch.evaluate_network_counts(name or plan.graph_name, counts, hw, v)
+
+
 def evaluate_sim(
     graph: CutieGraph,
     hw: Optional[arch.CutieHW] = None,
     v: float = 0.5,
     params: Optional[SimParams] = None,
+    memory: Optional[WeightMemory] = None,
 ) -> arch.NetReport:
     """The sim-side twin of `arch.evaluate_network`: lower -> count ->
     ingest per-layer cycles into the electrical model."""
     hw = hw or arch.CutieHW()
-    plan = lower(graph, hw)
-    counts = inference_counts(plan, hw, params)
-    return arch.evaluate_network_counts(graph.name, counts, hw, v)
+    return evaluate_plan(lower(graph, hw), hw, v, params, memory, name=graph.name)
 
 
 def reconcile(
@@ -169,15 +242,16 @@ def reconcile(
     """Sim-vs-analytic cycle reconciliation for one graph.
 
     ``divergence`` = sim_cycles / analytic_cycles - 1.  Non-negative by
-    construction for schedulable nets (the sim only *adds* fill/drain); the
-    gate bounds it from above.  ``analytic_schedulable`` False marks nets
-    whose schedule the formula cannot express (kernel > native window) —
-    divergence is reported but not gated there."""
+    construction for schedulable nets (the sim only *adds* fill/drain/stall
+    cycles); the gate bounds it from above.  ``analytic_schedulable`` False
+    marks nets whose schedule the formula cannot express (kernel > native
+    window) — divergence is reported but not gated there.
+    ``stall_cycles`` totals the feature-memory serialization the analytic
+    model can never see (zero whenever double buffering holds)."""
     hw = hw or arch.CutieHW()
     plan = lower(graph, hw)
-    sim = arch.evaluate_network_counts(
-        graph.name, inference_counts(plan, hw, params), hw, v
-    )
+    counts = inference_counts(plan, hw, params)
+    sim = arch.evaluate_network_counts(graph.name, counts, hw, v)
     analytic = arch.evaluate_network(
         graph.name, plan.to_arch_layers(), hw, v
     )
@@ -188,6 +262,7 @@ def reconcile(
         "analytic_cycles": analytic.cycles,
         "divergence": sim.cycles / analytic.cycles - 1.0,
         "analytic_schedulable": analytic_schedulable(plan, hw),
+        "stall_cycles": sum(c.stall_cycles for c in counts),
         "ring": dataclasses.asdict(RingBufferSchedule.for_plan(plan))
         if plan.feature_channels else None,
     }
@@ -199,6 +274,8 @@ def counts_summary(counts: Sequence[LayerCounters]) -> dict:
         "cycles": sum(c.cycles for c in counts),
         "macs": sum(c.macs for c in counts),
         "ops": sum(c.ops for c in counts),
+        "dyn_ops": sum(c.dyn_ops for c in counts),
+        "stall_cycles": sum(c.stall_cycles for c in counts),
         "wmem_bytes": sum(c.wmem_bytes for c in counts),
         "fmap_reads": sum(c.fmap_reads for c in counts),
         "fmap_writes": sum(c.fmap_writes for c in counts),

@@ -1,10 +1,18 @@
-"""Plan execution — the ``backend="bitsim"`` interpreter.
+"""Plan execution — the ``backend="bitsim"`` interpreter, and the
+graph-free plan walk every other backend shares.
 
 Walks the `ExecutionPlan` tile-by-tile, reading every weight from the
 trit-packed `WeightMemory` images (unpacked per `TileAssign` slice — tile
 boundaries are byte-aligned because ``max_cin`` is a multiple of the 4-trit
 pack quantum) and accumulating partial sums across C_in tiles the way the
 OCU adder tree does.
+
+A non-default ``backend`` ("ref"/"fused"/"pallas"/"interpret") replaces the
+tiled-conv walk with one `api.program._dispatch_conv` launch per layer —
+the SAME kernels the `DeployedProgram` interpreter dispatches, driven from
+the plan + weight images alone.  This is what lets an artifact-loaded
+program (`repro.artifact.LoadedProgram`) execute on every backend with no
+`CutieGraph` in sight: the plan IS the program.
 
 Bit-exactness contract (tested against ``ref`` and ``fused`` in
 tests/test_sim.py): with ternary/dyadic activations — true for every
@@ -60,11 +68,23 @@ class PlanExecutor:
     exactly (the deploy interpreter is the contract); the difference is that
     convolutions run as the plan's scheduled tile passes over the packed
     images instead of one monolithic kernel call.  Pure jnp — jits, vmaps,
-    and serves through `StreamSession`/`SessionPool` unchanged."""
+    and serves through `StreamSession`/`SessionPool` unchanged.
 
-    def __init__(self, plan: ExecutionPlan, memory: WeightMemory):
+    ``backend="bitsim"`` (default) is the tiled walk; any other deploy
+    backend routes each conv through `api.program._dispatch_conv` with this
+    layer's image — fused keeps its single-launch conv+scale+threshold
+    (+pool) epilogue and int8 activations, the others return the scaled
+    float accumulator and ternarize here, exactly the `DeployedProgram`
+    dataflow."""
+
+    def __init__(self, plan: ExecutionPlan, memory: WeightMemory,
+                 backend: str = "bitsim"):
+        from repro.api.program import check_backend
+
+        check_backend(backend)
         self.plan = plan
         self.memory = memory
+        self.backend = backend
 
     # -- constructors ------------------------------------------------------
 
@@ -111,20 +131,53 @@ class PlanExecutor:
         return y * jnp.asarray(img.eff_scale).reshape(1, 1, 1, -1)
 
     def _conv_layer(self, x: jax.Array, lp: LayerPlan) -> jax.Array:
+        from repro.api.program import _dispatch_conv
+
         img = self.memory.image_for(lp)
         x = _pad_channels(x, lp.c_pad)
-        y = self._tiled_conv(x, lp, img)
+        if self.backend == "bitsim":
+            y = self._tiled_conv(x, lp, img)
+        elif self.backend == "fused":
+            return _dispatch_conv(
+                x, jnp.asarray(img.packed), jnp.asarray(img.eff_scale),
+                "fused", threshold=img.threshold, pool=lp.pool,
+            )
+        else:
+            y = _dispatch_conv(
+                x, jnp.asarray(img.packed), jnp.asarray(img.eff_scale),
+                self.backend,
+            )
         t = _ternarize(y, img.threshold)
         if lp.pool:
             t = _max_pool(t, lp.pool)
-        return t.astype(jnp.int8)
+        # the deploy interpreter keeps float trits between layers on the
+        # unfused backends; bitsim models the 2-bit feature memory as int8
+        return t.astype(jnp.int8) if self.backend == "bitsim" else t
 
     def _tcn_layer(self, x: jax.Array, lp: LayerPlan) -> jax.Array:
         """One §4-mapped TCN layer over [B, T, C]: wrap -> causal-padded
         tiled SAME conv -> unwrap -> threshold, the deploy schedule."""
+        from repro.api.program import _dispatch_conv
+
         img = self.memory.image_for(lp)
-        z = wrap_time_axis(x.astype(jnp.float32), img.dilation)
         kh = lp.kh
+        if self.backend != "bitsim":
+            z = wrap_time_axis(x, img.dilation)
+            zp = jnp.pad(z, ((0, 0), ((kh - 1) - (kh - 1) // 2, 0), (0, 0), (0, 0)))
+            zp = _pad_channels(zp, lp.c_pad)
+            if self.backend == "fused":
+                y2 = _dispatch_conv(
+                    zp, jnp.asarray(img.packed), jnp.asarray(img.eff_scale),
+                    "fused", threshold=img.threshold,
+                )[:, : z.shape[1]]
+                return unwrap_time_axis(y2, x.shape[1])
+            y2 = _dispatch_conv(
+                zp, jnp.asarray(img.packed), jnp.asarray(img.eff_scale),
+                self.backend,
+            )[:, : z.shape[1]]
+            y = unwrap_time_axis(y2, x.shape[1])
+            return _ternarize(y, img.threshold)
+        z = wrap_time_axis(x.astype(jnp.float32), img.dilation)
         zp = jnp.pad(z, ((0, 0), ((kh - 1) - (kh - 1) // 2, 0), (0, 0), (0, 0)))
         zp = _pad_channels(zp, lp.c_pad)
         y2 = self._tiled_conv(zp, lp, img)[:, : z.shape[1]]

@@ -25,7 +25,7 @@ import jax
 import numpy as np
 
 from repro.api.program import effective_scale
-from repro.core.ternary import pack_ternary
+from repro.core.ternary import pack_ternary, sparsity, unpack_ternary
 from repro.sim.plan import ExecutionPlan, LayerPlan
 
 Threshold = Union[float, np.ndarray]
@@ -52,6 +52,23 @@ class LayerImage:
     @property
     def nbytes(self) -> int:
         return int(self.packed.size)
+
+    def weight_sparsity(self, c_in: int) -> float:
+        """Fraction of exact-zero trits over the layer's REAL fan-in
+        (`core.ternary.sparsity` on the unpacked image, pack-quantum padding
+        channels excluded — they are zeros by construction and the MAC
+        count `LayerPlan.macs` does not include them either).  A zero weight
+        gates its multiplier, so this is the static share of the array that
+        never toggles — what the sparsity-aware energy counter prices.
+
+        For TCN images the §4 projection's structurally-zero kernel columns
+        DO count: the mapped 2-D schedule streams them through the array
+        (macs counts kh*kw*c_in), and on silicon they sit in the weight SCM
+        as real zero trits."""
+        axis = 0 if self.kind == "fc" else 2
+        trits = unpack_ternary(np.asarray(self.packed), axis=axis)
+        trits = trits[:c_in] if self.kind == "fc" else trits[:, :, :c_in]
+        return float(sparsity(trits))
 
     def to_dict(self) -> dict:
         thr = self.threshold
@@ -173,6 +190,12 @@ class WeightMemory:
 
 ACT_BITS = 2  # ternary activations: 2 bits each (the silicon's memory model)
 
+# One Kraken feature-memory bank: max_fmap^2 pixels x max_cin channels x 2 b
+# (64*64*96*2/8 = 98304 B).  Every registry net's maps fit a bank, so the
+# stall counters below are zero on the default geometry — the double-buffer
+# contract the silicon was sized for.
+KRAKEN_FMAP_BANK_BYTES = 64 * 64 * 96 * ACT_BITS // 8
+
 
 def fmap_bytes(h: int, w: int, c: int) -> int:
     """Bytes of one 2-bit activation map — what one feature-memory bank
@@ -187,9 +210,55 @@ class FeatureMemory:
     the schedule cost is pure traffic, counted per layer below.
 
     Words are pixel-vectors: one word = one pixel's channel slice (at most
-    ``max_cin`` channels x 2 bit)."""
+    ``max_cin`` channels x 2 bit).
+
+    ``bank_bytes`` sizes one bank.  A conv/tcn layer is *double-bufferable*
+    only when its input map and its (post-pool) output map each fit one
+    bank; a layer that spills shares a bank between the in-flight read
+    stream and the writeback, which `layer_stalls` prices (the sim's
+    bank-conflict / non-double-bufferable counters — zero for every
+    registry net on the Kraken geometry)."""
 
     max_cin: int
+    bank_bytes: int = KRAKEN_FMAP_BANK_BYTES
+
+    def out_hw(self, lp: LayerPlan) -> tuple:
+        if lp.pool and lp.kind in ("conv2d", "tcn"):
+            return lp.h // lp.pool, lp.w // lp.pool
+        return lp.h, lp.w
+
+    def double_bufferable(self, lp: LayerPlan) -> bool:
+        """True when layer ``lp``'s in and out maps each fit one bank.
+        Non-conv layers are addressing-only and trivially double-buffer."""
+        if lp.kind not in ("conv2d", "tcn"):
+            return True
+        oh, ow = self.out_hw(lp)
+        return (fmap_bytes(lp.h, lp.w, lp.c_in) <= self.bank_bytes
+                and fmap_bytes(oh, ow, lp.c_out) <= self.bank_bytes)
+
+    def layer_stalls(self, lp: LayerPlan) -> dict:
+        """{bank_conflict, ndb} stall cycles for one plan layer.
+
+        Double-bufferable layers stall zero cycles — ping-pong banking
+        decouples the read stream from the writeback.  A spilled layer
+        serializes on the single shared bank:
+
+          * ``bank_conflict`` — every output writeback word steals one
+            read-port cycle from the in-flight input stream (one stall per
+            write word, i.e. the layer's write traffic);
+          * ``ndb`` — with no second bank to ping-pong into, the line
+            buffer must re-prime from the shared bank after each tile
+            pass's writeback burst: one extra (kh-1)-row fill per tile
+            pass on top of the pipelined fill the cycle model already
+            counts."""
+        if lp.kind not in ("conv2d", "tcn") or self.double_bufferable(lp):
+            return {"bank_conflict": 0, "ndb": 0}
+        traffic = self.layer_traffic(lp)
+        fill = (lp.kh - 1) * lp.w
+        return {
+            "bank_conflict": traffic["writes"],
+            "ndb": max(len(lp.tiles), 1) * fill,
+        }
 
     def layer_traffic(self, lp: LayerPlan) -> dict:
         """{reads, writes} in pixel-vector words for one plan layer.

@@ -1,0 +1,238 @@
+"""Loaded-artifact execution: `LoadedProgram` vs the in-memory program.
+
+The round-trip contract of ISSUE 6, pinned end to end:
+
+  * ``assemble -> loads -> execute`` is **bit-exact** against the
+    `DeployedProgram` it came from on every backend (bitsim / ref / fused),
+    for every registry net (aliases deduped), batch and streamed, including
+    per-channel threshold vectors — with **zero** `CutieGraph` objects on
+    the load path (serving duck-types against `ProgramInfo`);
+  * a `SessionPool` served straight from the artifact matches independent
+    `StreamSession`s frame for frame;
+  * `LoadedProgram.silicon_report()` — the stall-aware, sparsity-priced
+    golden model running on the loaded plan + images — still reproduces the
+    paper's calibrated 2.72 uJ / 3200 inf/s CIFAR-10 corner;
+  * the feature-memory stall counters are zero at the Kraken bank geometry
+    for every registry net (the double-buffer contract) and fire when the
+    bank is shrunk under a real program's maps;
+  * sparsity-aware energy: measured zero-trit fractions reduce ``dyn_ops``
+    and the dynamic energy, never the cycle/throughput model.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api, artifact
+from repro.api.graph import CutieGraph
+from repro.api.program import CutieProgram
+from repro.artifact import LoadedProgram, ProgramInfo
+from repro.core.cutie_arch import PAPER, CutieHW
+from repro.sim import SimParams
+from repro.sim.counters import count_plan, evaluate_plan, inference_counts
+from repro.sim.memory import FeatureMemory
+from repro.sim.plan import lower
+
+BACKENDS = ("bitsim", "ref", "fused")
+
+
+def _registry_names():
+    """Registry nets with legacy aliases deduped (same graph, same name)."""
+    seen, out = set(), []
+    for name in api.list_nets():
+        g = api.get_graph(name)
+        if g.name not in seen:
+            seen.add(g.name)
+            out.append(name)
+    return out
+
+
+def _exact(a, b, msg=""):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b), err_msg=msg)
+
+
+def _deploy(name, seed=0, calib_seed=11, **init_kw):
+    prog = CutieProgram(api.get_graph(name))
+    params = prog.init(jax.random.PRNGKey(seed), **init_kw)
+    g = prog.graph
+    shape = ((1, 3, *g.input_hw, g.input_ch) if g.is_temporal
+             else (1, *g.input_hw, g.input_ch))
+    calib = jnp.sign(jax.random.normal(jax.random.PRNGKey(calib_seed), shape))
+    return prog.quantize(params, calib=calib)
+
+
+def _inputs(info, batch=1, frames=2, seed=4):
+    shape = ((batch, frames, *info.input_hw, info.input_ch)
+             if info.is_temporal else (batch, *info.input_hw, info.input_ch))
+    return jnp.sign(jax.random.normal(jax.random.PRNGKey(seed), shape))
+
+
+# ---------------------------------------------------------------------------
+# Equivalence: loaded artifact == deployed program, every net, every backend
+# ---------------------------------------------------------------------------
+
+class TestLoaderEquivalence:
+    @pytest.mark.parametrize("name", _registry_names())
+    def test_forward_bit_exact_on_every_registry_net(self, name):
+        dep = _deploy(name)
+        loaded = artifact.loads(dep.to_artifact_bytes())
+        x = _inputs(loaded.info)
+        for be in BACKENDS:
+            _exact(loaded.forward(x, backend=be), dep.forward(x, backend=be),
+                   f"{name}/{be}")
+
+    def test_no_graph_object_on_load_path(self):
+        loaded = artifact.loads(_deploy("dvs_cnn_tcn_smoke").to_artifact_bytes())
+        assert isinstance(loaded, LoadedProgram)
+        assert isinstance(loaded.graph, ProgramInfo)
+        assert not isinstance(loaded.graph, CutieGraph)
+        # the duck-typed metadata the serving stack reads
+        g = loaded.graph
+        assert g.is_temporal and g.tcn_steps > 0 and g.feature_channels > 0
+        assert loaded.nbytes == loaded.memory.nbytes > 0
+
+    def test_stream_bit_exact_vs_deployed_session(self):
+        dep = _deploy("dvs_cnn_tcn_smoke")
+        loaded = artifact.loads(dep.to_artifact_bytes())
+        frames = _inputs(loaded.info, batch=1, frames=4)
+        for be in ("bitsim", "fused"):
+            s_dep = dep.stream(batch=1, backend=be)
+            s_art = loaded.stream(batch=1, backend=be)
+            for t in range(frames.shape[1]):
+                want = s_dep.step(frames[:, t])
+                got = s_art.step(frames[:, t])
+                _exact(got, want, f"stream[{be}] step {t}")
+
+    def test_per_channel_thresholds_execute_identically(self):
+        dep = _deploy("dvs_cnn_tcn_smoke", learn_thresholds="per_channel")
+        loaded = artifact.loads(dep.to_artifact_bytes())
+        assert any(np.ndim(i.threshold) == 1 for i in loaded.memory.images)
+        x = _inputs(loaded.info, batch=2, frames=3)
+        for be in BACKENDS:
+            _exact(loaded.forward(x, backend=be), dep.forward(x, backend=be),
+                   f"per-channel/{be}")
+
+    def test_pool_serving_from_artifact(self):
+        """The fleet path: `SessionPool` over the loaded artifact matches an
+        independent single-stream `StreamSession` bit for bit."""
+        dep = _deploy("dvs_cnn_tcn_smoke")
+        loaded = artifact.loads(dep.to_artifact_bytes())
+        n_frames, streams = 3, ("s0", "s1")
+        frames = _inputs(loaded.info, batch=len(streams), frames=n_frames)
+        pool = loaded.serve(pool_size=len(streams), backend="fused")
+        for sid in streams:
+            pool.admit(sid)
+        for t in range(n_frames):
+            out = pool.step({sid: frames[i, t]
+                             for i, sid in enumerate(streams)})
+        for i, sid in enumerate(streams):
+            session = loaded.stream(batch=1, backend="fused")
+            for t in range(n_frames):
+                want = session.step(frames[i:i + 1, t])
+            _exact(out[sid], want[0], f"pool slot {sid}")
+        assert pool.trace_count == 1
+
+
+# ---------------------------------------------------------------------------
+# The golden model on the loaded artifact: stalls + sparsity + calibration
+# ---------------------------------------------------------------------------
+
+class TestLoadedSilicon:
+    def test_calibrated_cifar_corner_from_artifact(self):
+        """silicon_report on a LOADED artifact — stall counters on, dynamic
+        energy priced on the shipped images' sparsity — still lands on the
+        paper's measured corner after calibration."""
+        loaded = artifact.loads(_deploy("cifar10_tnn").to_artifact_bytes())
+        rep = loaded.silicon_report(v=0.5)
+        assert rep.source == "sim"
+        assert abs(rep.energy_uj - PAPER["cifar_energy_uj"]) < 1e-6
+        assert abs(rep.inf_per_s - PAPER["cifar_inf_per_s"]) < 1e-3
+        # sparsity pricing lowers the ideal energy, so more of the measured
+        # 2.72 uJ is "overhead" than under the dense ideal — the energy
+        # factor must exceed the cycle factor (the dense-ideal graph-level
+        # report, which passes no WeightMemory, keeps the two consistent;
+        # pinned in tests/test_sim.py)
+        assert rep.calibration.energy_overhead > rep.calibration.cycle_overhead
+
+    @pytest.mark.parametrize("name", _registry_names())
+    def test_registry_nets_stall_free_at_kraken_geometry(self, name):
+        """The double-buffer contract the silicon was sized for: no
+        registry net spills a 98304 B feature bank, so the stall counters
+        stay zero and BENCH_silicon cycles are unchanged by them."""
+        plan = lower(api.get_graph(name))
+        counts = count_plan(plan)
+        assert sum(c.stall_cycles for c in counts) == 0, name
+
+    def test_stall_counters_fire_when_bank_shrinks(self):
+        """Force a spill: with a bank smaller than the maps, conv layers
+        lose double buffering and both stall terms go positive, raising
+        cycles — and count_stalls=False switches them back off."""
+        plan = lower(api.get_graph("cifar10_tnn_smoke"))
+        tiny = SimParams(fmap_bank_bytes=64)
+        stalled = count_plan(plan, params=tiny)
+        free = count_plan(plan, params=SimParams(fmap_bank_bytes=64,
+                                                 count_stalls=False))
+        assert sum(c.bank_stall_cycles for c in stalled) > 0
+        assert sum(c.ndb_stall_cycles for c in stalled) > 0
+        assert sum(c.stall_cycles for c in free) == 0
+        assert (sum(c.cycles for c in stalled)
+                > sum(c.cycles for c in free))
+        fmem = FeatureMemory(max_cin=CutieHW().max_cin, bank_bytes=64)
+        conv = next(lp for lp in plan.layers if lp.kind == "conv2d")
+        assert not fmem.double_bufferable(conv)
+        assert FeatureMemory(max_cin=CutieHW().max_cin).double_bufferable(conv)
+
+    def test_stalled_cycles_still_respect_utilization_bound(self):
+        hw = CutieHW()
+        plan = lower(api.get_graph("cifar10_tnn_smoke"), hw)
+        for c in count_plan(plan, hw, SimParams(fmap_bank_bytes=64)):
+            if c.macs:
+                assert c.cycles >= c.macs / (hw.ops_per_cycle / 2), c.label
+                assert 0 < c.util <= 1.0, c.label
+
+    def test_sparsity_prices_dynamic_energy_not_throughput(self):
+        """A real quantized program has zero trits; with its WeightMemory
+        attached the counters report 0 < w_sparsity < 1 on weight layers,
+        dyn_ops < ops, and the sim energy drops — while cycles (and thus
+        inf/s) are untouched."""
+        dep = _deploy("cifar10_tnn_smoke")
+        loaded = artifact.loads(dep.to_artifact_bytes())
+        plan, memory = loaded.plan, loaded.memory
+        sparse = inference_counts(plan, memory=memory)
+        dense = inference_counts(plan)
+        weighted = [c for c in sparse if c.kind in ("conv2d", "tcn", "fc")]
+        assert weighted and all(0.0 < c.w_sparsity < 1.0 for c in weighted)
+        assert (sum(c.dyn_ops for c in sparse)
+                < sum(c.ops for c in sparse))
+        assert [c.cycles for c in sparse] == [c.cycles for c in dense]
+        with_mem = evaluate_plan(plan, memory=memory)
+        without = evaluate_plan(plan)
+        assert with_mem.energy_j < without.energy_j
+        assert with_mem.cycles == without.cycles
+
+    def test_sparsity_matches_core_ternary_on_real_fan_in(self):
+        """LayerImage.weight_sparsity measures the REAL fan-in slice —
+        pack-quantum padding channels (structural zeros) are excluded."""
+        from repro.core.ternary import sparsity, unpack_ternary
+
+        loaded = artifact.loads(_deploy("cifar10_tnn_smoke").to_artifact_bytes())
+        plan = loaded.plan
+        for lp in plan.weight_layers():
+            img = loaded.memory.image_for(lp)
+            if img.kind == "fc":
+                trits = unpack_ternary(np.asarray(img.packed), axis=0)[: lp.c_in]
+            else:
+                trits = unpack_ternary(np.asarray(img.packed), axis=2)[:, :, : lp.c_in]
+            assert img.weight_sparsity(lp.c_in) == pytest.approx(
+                float(sparsity(trits)))
+
+    def test_deployed_program_sim_report_uses_its_own_images(self):
+        """DeployedProgram.silicon_report(source="sim") prices THIS
+        program's sparsity: quantized-weight energy < dense-ideal energy at
+        the uncalibrated (smoke) corner."""
+        dep = _deploy("cifar10_tnn_smoke")
+        rep = dep.silicon_report(v=0.5, source="sim")
+        plan = lower(dep.graph)
+        dense = evaluate_plan(plan, v=0.5)
+        assert rep.ideal.energy_j < dense.energy_j
+        assert rep.ideal.cycles == dense.cycles
