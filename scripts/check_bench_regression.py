@@ -1,6 +1,6 @@
 """Bench regression gate: fresh smoke bench vs the committed baseline.
 
-Two modes:
+Three modes:
 
 **Backend mode** (default): CI's ``bench-smoke`` job regenerates the
 backend bench in smoke mode, then this script compares it against the
@@ -34,8 +34,23 @@ deterministic model sweep, no wall-clock) and this script gates
     the sweep is deterministic, so any real model change trips this and
     forces a reviewed baseline refresh).
 
+**Kernel mode** (``--kernels``): CI's ``kernel-bench`` job regenerates the
+kernel microbench in smoke mode (``benchmarks/kernel_bench.py --smoke``)
+and this script gates, per kernel cell shared with the committed
+``BENCH_kernels.smoke.json`` baseline:
+
+  * **bit-exactness, unconditionally**: any fresh cell with
+    ``bit_exact: false`` — the packed select-decode output diverging from
+    the ref oracle on ternary inputs — fails the gate regardless of
+    tolerance.  This is a correctness wire, not a perf heuristic.
+  * the **packed-vs-unpacked speedup ratio**
+    (``speedup_packed_vs_unpacked``): same-process, same-machine ratio, so
+    runner speed cancels; a cell fails when the fresh ratio degrades more
+    than ``--tolerance`` below baseline.
+
     python scripts/check_bench_regression.py BENCH_backends.smoke.json fresh.json
     python scripts/check_bench_regression.py --silicon BENCH_silicon.json fresh.json
+    python scripts/check_bench_regression.py --kernels BENCH_kernels.smoke.json fresh.json
 
 Exit codes: 0 ok, 1 regression, 2 unusable inputs (missing cells/files).
 """
@@ -150,6 +165,66 @@ def check_silicon(baseline: dict, fresh: dict, sim_tolerance: float,
     return 0
 
 
+def kernel_cells(payload: dict) -> dict:
+    """{name: row} for one BENCH_kernels JSON."""
+    return {r["name"]: r for r in payload.get("results", [])}
+
+
+def check_kernels(baseline: dict, fresh: dict, tolerance: float) -> int:
+    """Gate the kernel microbench — see module docstring, kernel mode."""
+    base_cells = kernel_cells(baseline)
+    fresh_cells = kernel_cells(fresh)
+    failures = []
+    # 1) bit-exactness is unconditional: every fresh cell, shared or not
+    for name, row in sorted(fresh_cells.items()):
+        if not row.get("bit_exact", False):
+            failures.append(
+                f"{name}: packed kernel output is NOT bit-exact vs ref on "
+                "ternary inputs — correctness failure, tolerance does not "
+                "apply"
+            )
+    # 2) packed-vs-unpacked speedup ratio vs baseline (shared cells)
+    shared = sorted(set(base_cells) & set(fresh_cells))
+    for name in shared:
+        base = float(base_cells[name]["speedup_packed_vs_unpacked"])
+        now = float(fresh_cells[name]["speedup_packed_vs_unpacked"])
+        floor = base * (1.0 - tolerance)
+        ok = now >= floor
+        print(f"[kernel-gate] {name}: packed/unpacked speedup {now:.2f} "
+              f"(baseline {base:.2f}, floor {floor:.2f}) "
+              f"{'ok' if ok else 'REGRESSED'}")
+        if not ok:
+            failures.append(
+                f"{name}: packed-vs-unpacked speedup degraded "
+                f">{tolerance:.0%}: {base:.2f} -> {now:.2f}"
+            )
+    missing = sorted(set(base_cells) - set(fresh_cells))
+    if missing:
+        print(f"[kernel-gate] WARNING: baseline cells absent from fresh run: "
+              f"{missing}", file=sys.stderr)
+    extra = sorted(set(fresh_cells) - set(base_cells))
+    if extra:
+        print(f"[kernel-gate] note: new cells not yet in baseline: {extra}")
+    if not shared:
+        print("[kernel-gate] no shared cells between baseline and fresh run — "
+              "nothing gated; refresh the committed baseline", file=sys.stderr)
+        return 2
+    if failures:
+        for f in failures:
+            print(f"[kernel-gate] FAIL {f}", file=sys.stderr)
+        print(
+            "[kernel-gate] if only the speedup ratio tripped (bit_exact all "
+            "true) and it reproduces on a clean runner with no kernel "
+            "change, refresh the baseline: python benchmarks/kernel_bench.py "
+            "--smoke  (then commit BENCH_kernels.smoke.json)",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"[kernel-gate] {len(shared)} cells bit-exact and within "
+          f"{tolerance:.0%} of baseline speedup")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("baseline", help="committed baseline JSON")
@@ -162,6 +237,10 @@ def main(argv=None) -> int:
     ap.add_argument("--silicon", action="store_true",
                     help="gate a BENCH_silicon.json sweep instead of the "
                          "backend bench")
+    ap.add_argument("--kernels", action="store_true",
+                    help="gate a BENCH_kernels.json microbench instead of "
+                         "the backend bench (bit-exactness + packed/unpacked "
+                         "speedup)")
     ap.add_argument("--sim-tolerance", type=float, default=0.15,
                     help="silicon mode: max sim-vs-analytic cycle divergence "
                          "for analytically-schedulable nets (default 0.15)")
@@ -179,6 +258,8 @@ def main(argv=None) -> int:
 
     if args.silicon:
         return check_silicon(baseline, fresh, args.sim_tolerance, args.drift)
+    if args.kernels:
+        return check_kernels(baseline, fresh, args.tolerance)
 
     failures, lines, shared, missing, extra = compare(
         baseline, fresh, args.tolerance, args.backend

@@ -118,26 +118,35 @@ def _ternarize(y: jax.Array, threshold: float) -> jax.Array:
 
 
 def _dispatch_conv(x, packed, eff_scale, backend: str, *,
-                   threshold=0.5, pool: int = 0):
+                   threshold=0.5, pool: int = 0,
+                   block_cout: Optional[int] = None):
     """One SAME ternary conv through the selected backend.  ``x`` must
     already be channel-padded to 4 * packed.shape[2].  ``threshold`` is a
     scalar or per-channel [C_out] vector (the ThFU comparator constants).
+    ``block_cout`` is the layer's plan-driven kernel block
+    (`kernels.autotune`; None = the plan-less 128 default).
 
     The "fused" backend runs the whole CUTIE layer — conv, per-OCU scale,
-    threshold unit, optional ``pool``-window max-pool — in a single Pallas
-    launch and emits int8 ternary activations; the other backends return the
-    scaled float accumulator and leave ternarize/pool to the caller."""
+    threshold unit, optional ``pool``-window max-pool — in a single packed
+    launch (native select-decode datapath on CPU, the Pallas kernel on TPU)
+    and emits int8 ternary activations; "pallas"/"interpret" pin the Pallas
+    machinery (compiled/interpreted), return the scaled float accumulator,
+    and leave ternarize/pool to the caller."""
     check_backend(backend)
     if backend == "ref":
         return ternary_conv2d_ref(x, packed, eff_scale)
     if backend == "interpret":
-        return ternary_conv2d(x, packed, eff_scale, interpret=True)
+        return ternary_conv2d(
+            x, packed, eff_scale, impl="interpret", block_cout=block_cout
+        )
     if backend == "fused":
         return ternary_conv2d(
             x, packed, eff_scale, fuse_ternary=True, threshold=threshold,
-            fuse_pool=pool, out_dtype=jnp.int8,
+            fuse_pool=pool, out_dtype=jnp.int8, block_cout=block_cout,
         )
-    return ternary_conv2d(x, packed, eff_scale)
+    return ternary_conv2d(
+        x, packed, eff_scale, impl="pallas", block_cout=block_cout
+    )
 
 
 def _pad_channels(x: jax.Array, c: int) -> jax.Array:
@@ -448,6 +457,22 @@ class DeployedProgram:
         """This program's compiled `ExecutionPlan` (see `repro.sim.plan`)."""
         return self._bitsim().plan
 
+    @property
+    def kernel_blocks(self):
+        """Plan-driven autotuned kernel blocks, ``{"conv": [KernelBlock],
+        "tcn": [...]}`` in table order (`kernels.autotune.kernel_block_plan`
+        over this graph's lowered `ExecutionPlan`): the same `TileAssign`
+        geometry that prices cycles picks each layer's block_cout.  Cached —
+        lowering is pure; computed straight from `sim.plan.lower` so the
+        deploy hot path never has to materialize weight-memory images."""
+        kb = getattr(self, "_kernel_blocks", None)
+        if kb is None:
+            from repro.kernels.autotune import kernel_block_plan
+            from repro.sim.plan import lower
+
+            kb = self._kernel_blocks = kernel_block_plan(lower(self.graph))
+        return kb
+
     def _fc(self, x: jax.Array) -> jax.Array:
         fc = self.tables["fc"]
         if not jnp.issubdtype(x.dtype, jnp.floating):
@@ -474,9 +499,11 @@ class DeployedProgram:
         g = self.graph
         ci = 0
         fused_pools = 0
+        blocks = None if backend == "ref" else self.kernel_blocks["conv"]
         for l in g.spatial_layers:
             if l.kind == "conv2d":
                 entry = self.tables["conv"][ci]
+                bc = None if blocks is None else blocks[ci].block_cout
                 ci += 1
                 c_pad = 4 * entry["packed"].shape[2]
                 x = _pad_channels(x, c_pad)
@@ -486,10 +513,12 @@ class DeployedProgram:
                     x = _dispatch_conv(
                         x, entry["packed"], eff, backend,
                         threshold=entry.get("threshold", g.act_threshold), pool=pool,
+                        block_cout=bc,
                     )
                     fused_pools += 1 if pool else 0
                 else:
-                    y = _dispatch_conv(x, entry["packed"], eff, backend)
+                    y = _dispatch_conv(x, entry["packed"], eff, backend,
+                                       block_cout=bc)
                     x = _ternarize(y, entry.get("threshold", g.act_threshold))
             elif l.kind == "pool":
                 if fused_pools:
@@ -511,21 +540,27 @@ class DeployedProgram:
             return self._bitsim().temporal_forward(feats)
         g = self.graph
         x = feats
-        for entry, l in zip(self.tables["tcn"], (l for l in g.temporal_layers if l.kind == "tcn")):
+        blocks = None if backend == "ref" else self.kernel_blocks["tcn"]
+        for ti, (entry, l) in enumerate(
+            zip(self.tables["tcn"], (l for l in g.temporal_layers if l.kind == "tcn"))
+        ):
             z = wrap_time_axis(x, entry["dilation"])
             # the kernel runs SAME (top pad (kh-1)//2); add the rest of the
             # causal (kh-1) pad so it matches conv2d_undilated's schedule
             kh = l.kernel[0]
             zp = jnp.pad(z, ((0, 0), ((kh - 1) - (kh - 1) // 2, 0), (0, 0), (0, 0)))
             eff = self._eff_scale(entry, l.taps * x.shape[-1])
+            bc = None if blocks is None else blocks[ti].block_cout
             if backend == "fused":
                 y2 = _dispatch_conv(
                     zp, entry["packed"], eff, backend,
                     threshold=entry.get("threshold", g.act_threshold),
+                    block_cout=bc,
                 )[:, : z.shape[1]]
                 x = unwrap_time_axis(y2, x.shape[1])
             else:
-                y2 = _dispatch_conv(zp, entry["packed"], eff, backend)[:, : z.shape[1]]
+                y2 = _dispatch_conv(zp, entry["packed"], eff, backend,
+                                    block_cout=bc)[:, : z.shape[1]]
                 y = unwrap_time_axis(y2, x.shape[1])
                 x = _ternarize(y, entry.get("threshold", g.act_threshold))
         for l in g.temporal_layers:

@@ -8,6 +8,12 @@ kernel-facing helpers and the deploy tables.
 
 All helpers return ``(packed_uint8, scale)`` where ``unpack(packed) * scale``
 approximates the input weights (TWN: per-group threshold nu * E|w|).
+
+The packed bytes are not a storage-only format: the compute kernels consume
+them **verbatim** as operands (`core.ternary.select_masks` decodes each
+2-bit field to add/subtract select lines inside the kernel), so the bytes
+written into the deploy tables / `.cutie` images are byte-identical to what
+the datapath loads — no unpack-repack seam between deployment and compute.
 """
 from __future__ import annotations
 

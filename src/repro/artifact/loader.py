@@ -9,6 +9,13 @@ pools, and ``silicon_report()``.  There is NO `CutieGraph` (or any Python
 graph object) on this path: serving duck-types against `ProgramInfo`, and
 every backend executes the plan via `sim.execute.PlanExecutor` — the plan
 is the program, which is the whole point of shipping an artifact.
+
+Loaded programs run the trit-packed kernel datapath with plan-driven block
+shapes: the executor feeds each layer's packed image bytes straight to the
+select-decode kernels and picks ``block_cout`` per layer from the artifact's
+own `ExecutionPlan` tile geometry (`kernels.autotune`), so an artifact
+executes with the same autotuned launches as the `DeployedProgram` it was
+saved from.
 """
 from __future__ import annotations
 

@@ -14,6 +14,10 @@ provides:
     *memory traffic*: a ternary weight is 2 bits, so an [K, N] weight matrix
     moves HBM->VMEM at bf16/8 of the cost.  ``pack_ternary``/``unpack_ternary``
     implement the codec used by the Pallas kernels (kernels/ternary_matmul.py).
+  * ``select_masks``/``select_decode`` — the same codec read the way the
+    OCU adder tree reads it: two single-bit select masks (plus/minus) per
+    trit, so a MAC is add/subtract-select instead of a multiply.  The
+    compute kernels decode their packed operands through this algebra.
 
 Encoding: t in {-1,0,+1}  ->  (t+1) in {0,1,2}, 2 bits each, 4 values/byte,
 value ``i`` in bits ``2i..2i+1`` (little-endian within the byte).
@@ -176,6 +180,44 @@ def unpack_ternary(p: jax.Array, axis: int = -1, *, dtype=jnp.int8) -> jax.Array
     u = u.reshape(*u.shape[:-2], u.shape[-2] * 4)
     t = u.astype(jnp.int8) - 1
     return jnp.moveaxis(t.astype(dtype), -1, axis)
+
+
+def select_masks(p: jax.Array, axis: int = -1) -> Tuple[jax.Array, jax.Array]:
+    """Decode packed trits to ``(plus, minus)`` **select masks** — the CUTIE
+    OCU's add/subtract-select decode, at the codec level.
+
+    For each 2-bit code ``b1b0`` (00 -> -1, 01 -> 0, 10 -> +1):
+
+        plus  = b1                  (the +1 code is exactly "bit 1 set")
+        minus = NOR(b1, b0)         (the -1 code is exactly "no bit set")
+
+    Two single-bit selects straight off the packed byte — no subtraction,
+    no decoded magnitude.  A MAC against the masks is ``x·plus - x·minus``:
+    pass-through, negate, or drop, which is how the silicon's OCU adder
+    tree consumes its weight SCM words (and why it needs no multipliers).
+    Returns two uint8 0/1 arrays shaped like :func:`unpack_ternary` output;
+    ``plus - minus`` reproduces the trits (see :func:`select_decode`).
+    The code 11 never occurs in :func:`pack_ternary` output; the select
+    decode maps it to +1 (b1 set) — out of contract either way.
+    """
+    p = jnp.asarray(p)
+    axis = axis % p.ndim
+    p = jnp.moveaxis(p, axis, -1)
+    shifts = jnp.array([0, 2, 4, 6], dtype=jnp.uint8)
+    code = (p[..., None] >> shifts) & jnp.uint8(3)  # [..., K//4, 4]
+    code = code.reshape(*code.shape[:-2], code.shape[-2] * 4)
+    plus = (code >> 1) & jnp.uint8(1)
+    minus = ((code | (code >> 1)) & jnp.uint8(1)) ^ jnp.uint8(1)
+    return (jnp.moveaxis(plus, -1, axis), jnp.moveaxis(minus, -1, axis))
+
+
+def select_decode(p: jax.Array, axis: int = -1, *, dtype=jnp.int8) -> jax.Array:
+    """``plus - minus`` over :func:`select_masks` — bit-identical to
+    :func:`unpack_ternary` on valid packed words, but built from the two
+    single-bit selects the add/subtract datapath uses (no ``code - 1``
+    arithmetic decode).  This is the form the packed kernels consume."""
+    plus, minus = select_masks(p, axis)
+    return (plus.astype(jnp.int8) - minus.astype(jnp.int8)).astype(dtype)
 
 
 def packed_nbytes(shape, axis: int = -1) -> int:

@@ -1,8 +1,11 @@
-"""Pallas TPU kernels for the perf-critical ternary compute.
+"""Packed-ternary compute kernels for the perf-critical paths.
 
-Each kernel has: <name>.py (pl.pallas_call + BlockSpec), a jit'd public
-wrapper in ops.py, and a pure-jnp oracle in ref.py.  On CPU they run in
-interpret mode; the BlockSpecs target TPU v5e VMEM/MXU dimensioning.
+Each kernel has: <name>.py (the Pallas pl.pallas_call + BlockSpec form AND a
+``_native`` straight-XLA form of the same select-decode datapath), a jit'd
+public wrapper in ops.py that dispatches between them (``impl=`` — native on
+CPU, Pallas on TPU, interpreter on demand), and a pure-jnp oracle in ref.py.
+`kernels.autotune` derives per-layer block shapes from the
+`repro.sim.plan.ExecutionPlan` tile geometry.
 """
 from repro.kernels.ops import (
     ternary_matmul,
@@ -10,4 +13,20 @@ from repro.kernels.ops import (
     quantize_pack_matmul_weights,
     quantize_pack_conv_weights,
 )
+from repro.kernels.autotune import (
+    KernelBlock,
+    block_for_layer,
+    kernel_block_plan,
+)
 from repro.kernels import ref
+
+__all__ = [
+    "ternary_matmul",
+    "ternary_conv2d",
+    "quantize_pack_matmul_weights",
+    "quantize_pack_conv_weights",
+    "KernelBlock",
+    "block_for_layer",
+    "kernel_block_plan",
+    "ref",
+]

@@ -1,0 +1,91 @@
+"""Plan-driven kernel autotuning: `TileAssign` geometry -> block shapes.
+
+The fixed ``block_cout=128`` the wrappers used through PR 6 had nothing to
+do with the schedule the silicon model prices.  This module closes that gap:
+the SAME `repro.sim.plan.ExecutionPlan` that the bitsim executes and
+`sim.counters` prices also picks the fused kernel's output-channel block.
+
+Selection rule (`block_for_layer`):
+
+  * **plan-derived** — when the layer's `TileAssign`s have ONE uniform
+    output-channel width and the kernel fits the OCU window engine
+    (kh, kw <= 3, the line-buffer's native form), the kernel block IS the
+    tile width: one grid cell per OCU tile pass, so kernel launches and
+    priced tile passes line up one-to-one.  For the paper nets this yields
+    96 — the OCU count — on every 96-channel layer.
+  * **measured fallback** — when the plan cannot describe the layer as
+    uniform single-window passes (a 5x5 stem needs multiple window passes
+    per tile; ragged C_out yields mixed tile widths), the block comes from
+    `MEASURED_FALLBACK_BLOCKS`, a table measured on this container's
+    interpreter/native path where fewer, larger launches always won: the
+    largest measured block that divides C_out exactly, else one single
+    C_out-wide block (ops.py never has to pad).  `cifar10_tnn_wide`'s 5x5
+    stem — the net `sim.reconcile` reports ``analytic_schedulable=False``
+    for — is the designed counterexample exercising this path.
+
+Everything here is a pure function of the plan: same plan, same blocks —
+determinism is pinned in tests/test_autotune.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Dict, List
+
+if TYPE_CHECKING:  # avoid a hard kernels -> sim import at module load
+    from repro.sim.plan import ExecutionPlan, LayerPlan
+
+# Block candidates, measured (benchmarks/kernel_bench.py lineage) largest
+# first: on both the native path and the Pallas interpreter, grid-cell /
+# launch count dominates at these sizes, so the largest dividing block wins.
+MEASURED_FALLBACK_BLOCKS = (128, 96, 64, 48, 32, 24, 16, 8)
+
+# The OCU window engine holds kh x kw <= 3 x 3 natively; anything larger
+# takes multiple window passes per tile and leaves the plan-derived regime.
+_NATIVE_WINDOW = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelBlock:
+    """One layer's autotuned kernel block.  ``source`` records provenance:
+    ``"plan"`` (the `TileAssign` cout width, launches == tile passes) or
+    ``"fallback"`` (the measured table — the plan can't schedule the layer
+    as uniform single-window passes)."""
+
+    block_cout: int
+    source: str  # "plan" | "fallback"
+
+
+def _fallback_block(c_out: int) -> int:
+    for b in MEASURED_FALLBACK_BLOCKS:
+        if b <= c_out and c_out % b == 0:
+            return b
+    # nothing measured divides: one ragged-width block, ops.py pads nothing
+    return c_out
+
+
+def block_for_layer(lp: "LayerPlan") -> KernelBlock:
+    """The kernel block for one conv2d/tcn `LayerPlan` — see module
+    docstring for the plan-vs-fallback rule."""
+    if lp.kind not in ("conv2d", "tcn"):
+        raise ValueError(
+            f"layer {lp.index} ({lp.kind}) has no conv kernel block; only "
+            "conv2d/tcn layers dispatch through ternary_conv2d"
+        )
+    widths = lp.cout_tile_widths
+    if len(widths) == 1 and lp.kh <= _NATIVE_WINDOW and lp.kw <= _NATIVE_WINDOW:
+        return KernelBlock(block_cout=widths[0], source="plan")
+    return KernelBlock(block_cout=_fallback_block(lp.c_out), source="fallback")
+
+
+def kernel_block_plan(plan: "ExecutionPlan") -> Dict[str, List[KernelBlock]]:
+    """Per-layer blocks for every conv-kernel consumer of ``plan``, keyed
+    the way the deploy tables are: ``{"conv": [...], "tcn": [...]}`` in
+    layer order.  `DeployedProgram.kernel_blocks` caches this; the
+    `PlanExecutor` derives the same values per layer directly."""
+    blocks: Dict[str, List[KernelBlock]] = {"conv": [], "tcn": []}
+    for lp in plan.layers:
+        if lp.kind == "conv2d":
+            blocks["conv"].append(block_for_layer(lp))
+        elif lp.kind == "tcn":
+            blocks["tcn"].append(block_for_layer(lp))
+    return blocks

@@ -1,8 +1,22 @@
-"""Public jit'd wrappers over the Pallas kernels.
+"""Public jit'd wrappers over the packed compute kernels.
 
-Handle: arbitrary leading batch dims, padding to block multiples, automatic
-interpret-mode on CPU (the kernels TARGET TPU; on this container they execute
-via the Pallas interpreter for correctness), and a quantize+pack convenience.
+Handle: arbitrary leading batch dims, padding to block multiples, implementation
+dispatch, and a quantize+pack convenience.  Three implementations of one
+semantics (see ternary_conv2d.py / ternary_matmul.py):
+
+  * ``impl="native"`` — the packed select-decode datapath as straight XLA
+    ops.  The default on CPU hosts: identical math to the Pallas kernel
+    without paying the interpreter's per-grid-cell emulation.
+  * ``impl="pallas"``  — the Pallas kernel (compiled on TPU, interpreter on
+    CPU).  The default on TPU hosts and the ``backend="pallas"`` program
+    path.
+  * ``impl="interpret"`` — the Pallas interpreter forced, any host (the
+    ``backend="interpret"`` debug path; equivalent to ``interpret=True``).
+
+``block_cout=None`` (default) lets the caller's plan decide: the deploy
+interpreter and the `PlanExecutor` thread each layer's autotuned block
+(`kernels.autotune`, from the `ExecutionPlan`'s `TileAssign` geometry) —
+the fixed 128 only remains as the fallback for plan-less direct calls.
 """
 from __future__ import annotations
 
@@ -17,12 +31,47 @@ from repro.api.quantize import (  # noqa: F401
     quantize_pack_conv_weights,
     quantize_pack_matmul_weights,
 )
-from repro.kernels.ternary_matmul import ternary_matmul_pallas
-from repro.kernels.ternary_conv2d import ternary_conv2d_pallas
+from repro.kernels.ternary_matmul import (
+    ternary_matmul_native,
+    ternary_matmul_pallas,
+)
+from repro.kernels.ternary_conv2d import (
+    ternary_conv2d_native,
+    ternary_conv2d_pallas,
+)
+
+IMPLS = ("native", "pallas", "interpret")
 
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
+
+
+def _resolve_impl(impl: str | None, interpret: bool | None) -> str:
+    """One resolution rule for both wrappers.  Explicit ``impl`` wins; the
+    legacy ``interpret`` bool keeps its PR-2 meaning (True -> forced
+    interpreter, False -> compiled Pallas); neither -> native on CPU,
+    compiled Pallas on TPU."""
+    if impl is not None:
+        if impl not in IMPLS:
+            raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
+        return impl
+    if interpret is True:
+        return "interpret"
+    if interpret is False:
+        return "pallas"
+    return "native" if _on_cpu() else "pallas"
+
+
+def _interpret_flag(impl: str, interpret: bool | None) -> bool:
+    """The Pallas call's interpret flag once ``impl`` resolved to a Pallas
+    form: forced for impl="interpret", an explicit legacy bool is honored,
+    otherwise interpret iff the host has no Mosaic compiler (CPU)."""
+    if impl == "interpret":
+        return True
+    if interpret is not None:
+        return interpret
+    return _on_cpu()
 
 
 def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
@@ -35,7 +84,10 @@ def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
     return jnp.pad(x, widths)
 
 
-@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret", "impl"),
+)
 def ternary_matmul(
     x: jax.Array,
     w_packed: jax.Array,
@@ -45,19 +97,26 @@ def ternary_matmul(
     block_n: int = 128,
     block_k: int = 512,
     interpret: bool | None = None,
+    impl: str | None = None,
 ):
-    """y[..., N] = x[..., K] @ unpack(w_packed)[K, N] * scale[N]."""
-    if interpret is None:
-        interpret = _on_cpu()
+    """y[..., N] = x[..., K] @ select_decode(w_packed)[K, N] * scale[N]."""
+    impl = _resolve_impl(impl, interpret)
     *lead, k = x.shape
     k4, n = w_packed.shape
-    assert 4 * k4 >= k, (k, k4)
+    if 4 * k4 < k:
+        raise ValueError(
+            f"packed weight carries K={4 * k4} < input K={k}: the pack "
+            "quantum only ever pads, never truncates"
+        )
     x2 = x.reshape(-1, k)
     m = x2.shape[0]
-    # pad M to block_m, K to 4*k4 then to block_k, N to block_n
-    x2 = _pad_to(_pad_to(x2, 1, 1), 0, block_m)
     if 4 * k4 != k:
         x2 = jnp.pad(x2, ((0, 0), (0, 4 * k4 - k)))
+    if impl == "native":
+        y = ternary_matmul_native(x2, w_packed, scale.reshape(-1), out_dtype=x.dtype)
+        return y.reshape(*lead, n)
+    # pad M to block_m, K to block_k, N to block_n for the Pallas grid
+    x2 = _pad_to(x2, 0, block_m)
     bk = min(block_k, 4 * k4)
     bk -= bk % 4
     x2 = _pad_to(x2, 1, bk)
@@ -67,7 +126,8 @@ def ternary_matmul(
     bm = min(block_m, x2.shape[0])
     y = ternary_matmul_pallas(
         x2, wp, sc, block_m=bm, block_n=min(block_n, wp.shape[1]),
-        block_k=bk, interpret=interpret, out_dtype=x.dtype,
+        block_k=bk, interpret=_interpret_flag(impl, interpret),
+        out_dtype=x.dtype,
     )
     return y[:m, :n].reshape(*lead, n)
 
@@ -75,7 +135,8 @@ def ternary_matmul(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "block_cout", "fuse_ternary", "fuse_pool", "interpret", "out_dtype"
+        "block_cout", "fuse_ternary", "fuse_pool", "interpret", "impl",
+        "out_dtype",
     ),
 )
 def ternary_conv2d(
@@ -83,11 +144,12 @@ def ternary_conv2d(
     w_packed: jax.Array,
     scale: jax.Array,
     *,
-    block_cout: int = 128,
+    block_cout: int | None = None,
     fuse_ternary: bool = False,
     threshold=0.5,
     fuse_pool: int = 0,
     interpret: bool | None = None,
+    impl: str | None = None,
     out_dtype=None,
 ):
     """SAME ternary conv over [B, H, W, C_in].  With ``fuse_ternary`` (and
@@ -95,25 +157,34 @@ def ternary_conv2d(
     conv, threshold unit, pooling — is one kernel launch emitting 2-bit-class
     ternary activations.  ``threshold`` is the ThFU comparator constant:
     a scalar (splatted across OCUs) or a per-channel [C_out] vector — the
-    per-OCU comparator bank programmed at network load time."""
-    if interpret is None:
-        interpret = _on_cpu()
+    per-OCU comparator bank programmed at network load time.
+
+    ``block_cout``: the Pallas output-channel block.  ``None`` means "no
+    plan spoke": 128, clamped to C_out (plan-driven callers pass each
+    layer's `kernels.autotune` block).  Ragged C_out is padded up to the
+    block and sliced back out, fused epilogue included."""
+    impl = _resolve_impl(impl, interpret)
     kh, kw, c4, c_out = w_packed.shape
     c_in = x.shape[-1]
     if 4 * c4 != c_in:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, 4 * c4 - c_in)))
-    bc = min(block_cout, c_out)
-    wp = _pad_to(w_packed, 3, bc)
-    sc = _pad_to(scale.reshape(-1), 0, bc)
     thr = jnp.asarray(threshold, jnp.float32)
     if thr.ndim == 0:
         thr = jnp.full((c_out,), thr)
     elif thr.shape != (c_out,):
         raise ValueError(f"threshold shape {thr.shape} != ({c_out},)")
+    if impl == "native":
+        return ternary_conv2d_native(
+            x, w_packed, scale.reshape(-1), thr, fuse_ternary=fuse_ternary,
+            fuse_pool=fuse_pool, out_dtype=out_dtype or x.dtype,
+        )
+    bc = min(block_cout or 128, c_out)
+    wp = _pad_to(w_packed, 3, bc)
+    sc = _pad_to(scale.reshape(-1), 0, bc)
     th = _pad_to(thr, 0, bc)
     y = ternary_conv2d_pallas(
         x, wp, sc, th, block_cout=bc, fuse_ternary=fuse_ternary,
-        fuse_pool=fuse_pool, interpret=interpret,
+        fuse_pool=fuse_pool, interpret=_interpret_flag(impl, interpret),
         out_dtype=out_dtype or x.dtype,
     )
     return y[..., :c_out]

@@ -1,4 +1,4 @@
-"""Packed-ternary matmul Pallas kernel — CUTIE's dataflow, TPU-native.
+"""Packed-ternary matmul — CUTIE's dataflow, TPU-native, packed operands.
 
 The CUTIE silicon keeps the output stationary (one OCU per output channel,
 accumulator never leaves the unit) and the weights stationary (per-OCU weight
@@ -8,11 +8,23 @@ buffers).  The TPU translation of those two properties:
     scratch buffer across the whole K-reduction; it is written to HBM exactly
     once, on the last K step.
   * **minimal weight movement**: weights are stored *2-bit packed* in HBM
-    ([K/4, N] uint8) and expanded to {-1,0,+1} only inside VMEM, right before
-    the MXU dot.  Each packed byte crosses HBM->VMEM exactly once per output
-    tile — an 8x traffic reduction vs bf16 weights, which is the part of the
-    paper's "minimize data movement" insight that actually transfers to a
-    bandwidth-limited TPU (weight-streaming decode is the canonical case).
+    ([K/4, N] uint8) and decoded to add/subtract-select operands only inside
+    VMEM, right before the MXU dot.  Each packed byte crosses HBM->VMEM
+    exactly once per output tile — an 8x traffic reduction vs bf16 weights,
+    which is the part of the paper's "minimize data movement" insight that
+    actually transfers to a bandwidth-limited TPU (weight-streaming decode is
+    the canonical case).
+
+The in-register decode is `core.ternary.select_masks`' bit algebra (plus =
+b1, minus = NOR(b1, b0), operand = plus - minus): the MAC against a
+{-1,0,+1} select operand is the OCU adder tree's pass/negate/drop — no
+multiplier ever sees a decoded magnitude.
+
+``ternary_matmul_native`` runs the identical decode + dot as straight XLA
+ops (single K reduction, no tile loop) — the CPU-native packed path
+`ops.ternary_matmul` dispatches when no Pallas machinery is requested.
+Bit-identical to the Pallas path on ternary/dyadic data (integer-valued
+partial sums are exact in f32 under any accumulation order).
 
 Grid: (M/bm, N/bn, K/bk), K innermost so the accumulator revisits are
 contiguous.  Block shapes default to MXU-aligned multiples of 128.
@@ -29,14 +41,20 @@ from jax.experimental.pallas import tpu as pltpu
 _SHIFTS = (0, 2, 4, 6)
 
 
-def _unpack_tile(wp: jax.Array, dtype) -> jax.Array:
-    """(bk/4, bn) uint8 -> (bk, bn) in ``dtype`` with values {-1, 0, +1}.
+def _select_tile(wp: jax.Array, dtype) -> jax.Array:
+    """(bk/4, bn) uint8 -> (bk, bn) add/subtract-select operands in
+    ``dtype``, values {-1, 0, +1} via the plus/minus single-bit selects.
 
     The expansion is sublane-structured: byte row r expands to rows
     4r..4r+3, matching pack_ternary(axis=0 of the K dimension).
     """
     bk4, bn = wp.shape
-    parts = [((wp >> s) & jnp.uint8(3)).astype(jnp.int8) - jnp.int8(1) for s in _SHIFTS]
+    parts = []
+    for s in _SHIFTS:
+        code = (wp >> s) & jnp.uint8(3)
+        plus = (code >> 1) & jnp.uint8(1)
+        minus = ((code | (code >> 1)) & jnp.uint8(1)) ^ jnp.uint8(1)
+        parts.append(plus.astype(jnp.int8) - minus.astype(jnp.int8))
     w = jnp.stack(parts, axis=1)  # (bk4, 4, bn)
     return w.reshape(bk4 * 4, bn).astype(dtype)
 
@@ -49,7 +67,7 @@ def _tmm_kernel(x_ref, wp_ref, scale_ref, o_ref, acc_ref, *, n_k: int):
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[...]
-    w = _unpack_tile(wp_ref[...], x.dtype)
+    w = _select_tile(wp_ref[...], x.dtype)
     acc_ref[...] += jax.lax.dot_general(
         x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )
@@ -74,17 +92,30 @@ def ternary_matmul_pallas(
     interpret: bool = True,
     out_dtype=None,
 ):
-    """y[M, N] = x[M, K] @ unpack(w_packed)[K, N] * scale[N].
+    """y[M, N] = x[M, K] @ select_decode(w_packed)[K, N] * scale[N].
 
     ``w_packed``: [K/4, N] uint8 (pack_ternary along K).  ``scale``: [N] or
     [1, N] per-output-channel alpha.  M, K, N must already be padded to the
-    block sizes (ops.py handles padding).
+    block sizes (ops.py handles padding); a direct caller with non-dividing
+    blocks gets a `ValueError`, not a silent bad grid.
     """
     m, k = x.shape
     k4, n = w_packed.shape
-    assert k == 4 * k4, (k, k4)
-    assert k % block_k == 0 and block_k % 4 == 0
-    assert m % block_m == 0 and n % block_n == 0
+    if k != 4 * k4:
+        raise ValueError(
+            f"K={k} does not match packed K/4={k4}: pad x to the 4-trit "
+            "pack quantum (kernels.ops.ternary_matmul pads)"
+        )
+    if block_k % 4 or k % block_k:
+        raise ValueError(
+            f"block_k={block_k} must be a multiple of 4 dividing K={k} "
+            "(kernels.ops.ternary_matmul clamps and pads)"
+        )
+    if m % block_m or n % block_n:
+        raise ValueError(
+            f"block_m={block_m}/block_n={block_n} must divide M={m}/N={n} "
+            "(kernels.ops.ternary_matmul pads and slices)"
+        )
     scale = scale.reshape(1, n)
     out_dtype = out_dtype or x.dtype
     n_k = k // block_k
@@ -102,3 +133,29 @@ def ternary_matmul_pallas(
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
         interpret=interpret,
     )(x, w_packed, scale)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype",))
+def ternary_matmul_native(
+    x: jax.Array,
+    w_packed: jax.Array,
+    scale: jax.Array,
+    *,
+    out_dtype=None,
+):
+    """The Pallas kernel's math as one straight XLA dot: select-decode the
+    packed words, dot, scale.  No M/N/K tiling (XLA tiles the dot itself),
+    so the only geometry requirement is the pack quantum."""
+    m, k = x.shape
+    k4, n = w_packed.shape
+    if k != 4 * k4:
+        raise ValueError(
+            f"K={k} does not match packed K/4={k4}: pad x to the 4-trit "
+            "pack quantum (kernels.ops.ternary_matmul pads)"
+        )
+    w = _select_tile(w_packed, x.dtype)
+    y = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    y = y * scale.reshape(1, n).astype(jnp.float32)
+    return y.astype(out_dtype or x.dtype)

@@ -85,6 +85,19 @@ class PlanExecutor:
         self.plan = plan
         self.memory = memory
         self.backend = backend
+        self._blocks = {}  # layer index -> autotuned KernelBlock
+
+    def _block_cout(self, lp: LayerPlan):
+        """This layer's plan-driven kernel block (`kernels.autotune` over
+        the SAME `LayerPlan` the counters price) — what makes an
+        artifact-loaded program run the autotuned packed path with no graph
+        objects anywhere."""
+        kb = self._blocks.get(lp.index)
+        if kb is None:
+            from repro.kernels.autotune import block_for_layer
+
+            kb = self._blocks[lp.index] = block_for_layer(lp)
+        return kb.block_cout
 
     # -- constructors ------------------------------------------------------
 
@@ -141,11 +154,12 @@ class PlanExecutor:
             return _dispatch_conv(
                 x, jnp.asarray(img.packed), jnp.asarray(img.eff_scale),
                 "fused", threshold=img.threshold, pool=lp.pool,
+                block_cout=self._block_cout(lp),
             )
         else:
             y = _dispatch_conv(
                 x, jnp.asarray(img.packed), jnp.asarray(img.eff_scale),
-                self.backend,
+                self.backend, block_cout=self._block_cout(lp),
             )
         t = _ternarize(y, img.threshold)
         if lp.pool:
@@ -169,11 +183,12 @@ class PlanExecutor:
                 y2 = _dispatch_conv(
                     zp, jnp.asarray(img.packed), jnp.asarray(img.eff_scale),
                     "fused", threshold=img.threshold,
+                    block_cout=self._block_cout(lp),
                 )[:, : z.shape[1]]
                 return unwrap_time_axis(y2, x.shape[1])
             y2 = _dispatch_conv(
                 zp, jnp.asarray(img.packed), jnp.asarray(img.eff_scale),
-                self.backend,
+                self.backend, block_cout=self._block_cout(lp),
             )[:, : z.shape[1]]
             y = unwrap_time_axis(y2, x.shape[1])
             return _ternarize(y, img.threshold)

@@ -92,6 +92,15 @@ class LayerPlan:
         return self.h * self.w if self.kind in ("conv2d", "tcn") else 1
 
     @property
+    def cout_tile_widths(self) -> Tuple[int, ...]:
+        """Sorted distinct output-channel widths of this layer's
+        `TileAssign`s — the tile-geometry export `kernels.autotune`
+        consumes to pick the fused kernel's block_cout (a single uniform
+        width on a <=3x3 layer means launches map 1:1 onto the priced OCU
+        tile passes)."""
+        return tuple(sorted({t.c_out for t in self.tiles}))
+
+    @property
     def macs(self) -> int:
         if self.kind == "fc":
             return self.c_in * self.c_out

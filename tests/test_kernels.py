@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.ternary import pack_ternary
+from repro.core.ternary import pack_ternary, select_decode, select_masks, unpack_ternary
 from repro.kernels import (
     quantize_pack_conv_weights,
     quantize_pack_matmul_weights,
@@ -13,6 +13,111 @@ from repro.kernels import (
     ternary_matmul,
 )
 from repro.kernels.ref import ternary_conv2d_ref, ternary_matmul_ref
+
+
+class TestSelectDecode:
+    """The in-kernel packed-byte decode: 2-bit fields -> add/sub selects."""
+
+    @pytest.mark.parametrize("axis", [0, 1, -1])
+    def test_decode_matches_unpack(self, axis):
+        rng = np.random.RandomState(11)
+        t = jnp.asarray(rng.randint(-1, 2, (12, 8, 20)).astype(np.int8))
+        p = pack_ternary(t, axis=axis)
+        np.testing.assert_array_equal(
+            np.asarray(select_decode(p, axis=axis)),
+            np.asarray(unpack_ternary(p, axis=axis)),
+        )
+
+    def test_masks_one_hot_per_trit(self):
+        """plus/minus select lines are never both asserted (the OCU either
+        adds, subtracts, or skips) and reproduce the trit as plus - minus."""
+        rng = np.random.RandomState(12)
+        t = jnp.asarray(rng.randint(-1, 2, (64,)).astype(np.int8))
+        plus, minus = select_masks(pack_ternary(t, axis=0), axis=0)
+        plus, minus = np.asarray(plus), np.asarray(minus)
+        assert ((plus + minus) <= 1).all()
+        np.testing.assert_array_equal(
+            plus.astype(np.int8) - minus.astype(np.int8), np.asarray(t)
+        )
+
+
+class TestImplDispatch:
+    """native / pallas(interpret) are one semantics: bit-equal on trit data."""
+
+    def test_matmul_native_equals_interpret_bit_exact(self):
+        rng = np.random.RandomState(21)
+        x = jnp.asarray(rng.randint(-1, 2, (64, 128)).astype(np.float32))
+        t = jnp.asarray(rng.randint(-1, 2, (128, 40)).astype(np.int8))
+        wp = pack_ternary(t, axis=0)
+        sc = jnp.asarray(np.abs(rng.randn(40)).astype(np.float32) + 0.1)
+        y_nat = ternary_matmul(x, wp, sc, impl="native")
+        y_int = ternary_matmul(x, wp, sc, impl="interpret")
+        np.testing.assert_array_equal(np.asarray(y_nat), np.asarray(y_int))
+
+    def test_conv_fused_pool_native_equals_interpret_bit_exact(self):
+        rng = np.random.RandomState(22)
+        x = jnp.asarray(rng.randint(-1, 2, (2, 8, 8, 16)).astype(np.float32))
+        t = jnp.asarray(rng.randint(-1, 2, (3, 3, 16, 24)).astype(np.int8))
+        wp = pack_ternary(t, axis=2)
+        sc = jnp.asarray(np.abs(rng.randn(24)).astype(np.float32) + 0.1)
+        kw = dict(fuse_ternary=True, threshold=0.3, fuse_pool=2,
+                  out_dtype=jnp.int8)
+        y_nat = ternary_conv2d(x, wp, sc, impl="native", **kw)
+        y_int = ternary_conv2d(x, wp, sc, impl="interpret", **kw)
+        assert y_nat.dtype == jnp.int8
+        np.testing.assert_array_equal(np.asarray(y_nat), np.asarray(y_int))
+
+    def test_unknown_impl_raises(self):
+        x = jnp.zeros((4, 8))
+        wp = pack_ternary(jnp.zeros((8, 4), jnp.int8), axis=0)
+        with pytest.raises(ValueError, match="unknown impl"):
+            ternary_matmul(x, wp, jnp.ones((4,)), impl="cuda")
+
+
+class TestBlockShapeErrors:
+    """Raggedness at the wrapper level pads; at the kernel level it is a
+    contract violation with an actionable ValueError (was: bare assert)."""
+
+    def test_conv_pallas_non_dividing_block_raises(self):
+        from repro.kernels.ternary_conv2d import ternary_conv2d_pallas
+
+        rng = np.random.RandomState(31)
+        t = jnp.asarray(rng.randint(-1, 2, (3, 3, 8, 10)).astype(np.int8))
+        wp = pack_ternary(t, axis=2)
+        x = jnp.zeros((1, 8, 8, 8))
+        sc, th = jnp.ones((10,)), jnp.full((10,), 0.5)
+        with pytest.raises(ValueError, match="cannot tile C_out"):
+            ternary_conv2d_pallas(x, wp, sc, th, block_cout=8, interpret=True)
+
+    def test_conv_wrapper_pads_non_dividing_block(self):
+        """The public wrapper accepts the same geometry the kernel rejects."""
+        rng = np.random.RandomState(32)
+        x = jnp.asarray(rng.randint(-1, 2, (1, 8, 8, 8)).astype(np.float32))
+        t = jnp.asarray(rng.randint(-1, 2, (3, 3, 8, 10)).astype(np.int8))
+        wp = pack_ternary(t, axis=2)
+        sc = jnp.ones((10,), jnp.float32)
+        got = ternary_conv2d(x, wp, sc, block_cout=8, impl="interpret")
+        want = ternary_conv2d_ref(x, wp, sc)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_matmul_pallas_block_errors(self):
+        from repro.kernels.ternary_matmul import ternary_matmul_pallas
+
+        x = jnp.zeros((64, 64))
+        wp = pack_ternary(jnp.zeros((64, 64), jnp.int8), axis=0)
+        sc = jnp.ones((64,))
+        with pytest.raises(ValueError, match="block_k"):
+            ternary_matmul_pallas(x, wp, sc, block_m=64, block_n=64,
+                                  block_k=48, interpret=True)
+        with pytest.raises(ValueError, match="must divide M"):
+            ternary_matmul_pallas(x, wp, sc, block_m=48, block_n=64,
+                                  block_k=64, interpret=True)
+
+    def test_matmul_truncating_pack_raises(self):
+        x = jnp.zeros((4, 16))
+        wp = pack_ternary(jnp.zeros((8, 4), jnp.int8), axis=0)  # K=8 < 16
+        with pytest.raises(ValueError, match="never truncates"):
+            ternary_matmul(x, wp, jnp.ones((4,)))
 
 
 def _tol(dtype):
@@ -88,14 +193,16 @@ class TestTernaryMatmulKernel:
         want = ternary_matmul_ref(x, wp, sc)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)
 
-    def test_block_size_invariance(self):
-        """Different BlockSpec tilings must give identical results."""
+    @pytest.mark.parametrize("impl", ["native", "interpret"])
+    def test_block_size_invariance(self, impl):
+        """Different BlockSpec tilings must give identical results (the
+        native impl ignores block args entirely — same answer either way)."""
         x = jax.random.normal(jax.random.PRNGKey(4), (256, 1024))
         w = jax.random.normal(jax.random.PRNGKey(5), (1024, 256))
         wp, sc = quantize_pack_matmul_weights(w)
-        y1 = ternary_matmul(x, wp, sc, block_m=128, block_n=128, block_k=512)
-        y2 = ternary_matmul(x, wp, sc, block_m=64, block_n=256, block_k=256)
-        y3 = ternary_matmul(x, wp, sc, block_m=256, block_n=64, block_k=1024)
+        y1 = ternary_matmul(x, wp, sc, block_m=128, block_n=128, block_k=512, impl=impl)
+        y2 = ternary_matmul(x, wp, sc, block_m=64, block_n=256, block_k=256, impl=impl)
+        y3 = ternary_matmul(x, wp, sc, block_m=256, block_n=64, block_k=1024, impl=impl)
         # different K-split orders differ only by f32 reduction-order noise
         np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4, atol=1e-4)
         np.testing.assert_allclose(np.asarray(y1), np.asarray(y3), rtol=1e-4, atol=1e-4)
