@@ -12,7 +12,11 @@ trajectory for `repro.serving.SessionPool` continuous batching.  For every
     speedup over it,
   * spot-checks one stream's pooled logits against an independent
     `StreamSession` replay (bit-exact) and exits non-zero on mismatch,
-    mirroring the backend bench's CI contract.
+    mirroring the backend bench's CI contract,
+  * samples per-tick wall latency and reports p50/p99 percentiles
+    (compile excluded via warmup), per cell and — in the multi-tenant
+    fleet cell (>= 3 distinct nets on one `FleetRouter`, measured on a
+    pre-warmed second round) — per net and per bucket pool size.
 
 On a CPU host the Pallas backends run in interpreter mode, so wall-clock is
 directional (the JSON's ``meta.jax_backend`` records the host); the
@@ -39,10 +43,17 @@ REPO_ROOT = Path(__file__).resolve().parents[1]
 sys.path.insert(0, str(REPO_ROOT / "src"))
 
 from repro import api  # noqa: E402
-from repro.serving import ContinuousBatcher, StreamRequest  # noqa: E402
+from repro.serving import (  # noqa: E402
+    ContinuousBatcher,
+    FleetRouter,
+    StreamRequest,
+)
 
 FULL_NET = "dvs_cnn_tcn"
 SMOKE_NET = "dvs_cnn_tcn_smoke"
+# the multi-tenant cell: >= 3 distinct temporal registry nets per fleet
+FLEET_NETS_FULL = ("dvs_cnn_tcn", "dvs_cnn_tcn_micro", "dvs_cnn_tcn_nano")
+FLEET_NETS_SMOKE = ("dvs_cnn_tcn_smoke", "dvs_cnn_tcn_micro", "dvs_cnn_tcn_nano")
 
 
 def _event_clips(graph, n_streams: int, frames: int, key) -> jax.Array:
@@ -109,6 +120,96 @@ def bench_cell(deployed, clips, pool_size: int, backend: str):
         "ticks": stats["ticks"],
         "trace_count": stats["trace_count"],
         "exact_vs_single_session": exact,
+        # per-tick wall latency over the simulation (compile excluded by
+        # the warmup tick) — the serving-regression gate's percentiles
+        "latency_ms_p50": stats["latency_ms_p50"],
+        "latency_ms_p99": stats["latency_ms_p99"],
+    }
+
+
+def bench_fleet(net_names, backend: str, pool_cap: int, streams: int,
+                frames: int):
+    """The multi-tenant cell: >= 3 distinct nets on one `FleetRouter`,
+    staggered arrivals interleaved across buckets, ladder autoscaling.
+
+    Two rounds through the SAME router: round 1 warms every ladder rung
+    the scenario visits (compile ticks land here), then each bucket's
+    latency trace is cleared and round 2 is measured — so the percentiles
+    price steady-state serving while the trace audit still spans both
+    rounds (a rung re-traced in round 2 fails the zero-retrace contract).
+    """
+    router = FleetRouter(backend=backend, max_pool_size=pool_cap)
+    deps, clips = {}, {}
+    for idx, name in enumerate(net_names):
+        prog = api.get_net(name)
+        deps[name] = prog.quantize(prog.init(jax.random.PRNGKey(idx)))
+        router.register(name, deps[name])
+
+    def submit_round(tag: str, base_tick: int):
+        for idx, name in enumerate(net_names):
+            cs = _event_clips(deps[name].graph, streams, frames,
+                              jax.random.PRNGKey(100 + idx))
+            for s in range(streams):
+                sid = f"{tag}/{name}/{s}"
+                clips[sid] = np.asarray(cs[s])
+                router.submit(StreamRequest(
+                    stream_id=sid, frames=clips[sid],
+                    arrival=base_tick + idx + s * len(net_names), net=name,
+                ))
+
+    submit_round("warm", router.tick_index)
+    router.run()
+    for bucket in router.buckets.values():
+        bucket.batcher.latency_trace.clear()
+    submit_round("meas", router.tick_index)
+    t0 = time.perf_counter()
+    results = router.run()
+    wall = time.perf_counter() - t0
+    stats = router.stats()
+    router.close()
+
+    # bit-exactness: replay one measured stream per net through a lone
+    # batch-1 session (the same contract the single-pool cells gate)
+    exact = True
+    for r in results:
+        if not r.stream_id.startswith("meas/") or not r.stream_id.endswith("/0"):
+            continue
+        session = deps[r.net].stream(batch=1, backend=backend)
+        clip = clips[r.stream_id]
+        for t in range(clip.shape[0]):
+            ref = session.step(clip[t][None])
+        exact = exact and bool((np.asarray(ref)[0] == r.logits).all())
+
+    zero_retrace = all(
+        tc <= 1
+        for s in stats["nets"].values()
+        for tc in s["pools_traced"].values()
+    )
+    per_net = {
+        name: {
+            "latency_ms_p50": s["latency_ms_p50"],
+            "latency_ms_p99": s["latency_ms_p99"],
+            "latency_by_pool_size": s["latency_by_pool_size"],
+            "mean_occupancy": s["mean_occupancy"],
+            "completed": s["completed"],
+            "pools_traced": s["pools_traced"],
+            "scale_events": len(s["scale_events"]),
+        }
+        for name, s in stats["nets"].items()
+    }
+    return {
+        "nets": list(net_names),
+        "backend": backend,
+        "pool_cap": pool_cap,
+        "streams_per_net": streams,
+        "frames_per_stream": frames,
+        "measured_wall_s": wall,
+        "completed": sum(r.stream_id.startswith("meas/") for r in results),
+        "per_net": per_net,
+        "latency_ms_p50": stats["aggregate"]["latency_ms_p50"],
+        "latency_ms_p99": stats["aggregate"]["latency_ms_p99"],
+        "exact_vs_single_session": exact,
+        "zero_retrace": zero_retrace,
     }
 
 
@@ -147,11 +248,35 @@ def run(args) -> int:
                 f"{row['pool_frames_per_s']:8.1f} frames/s "
                 f"(x{row['speedup_vs_sequential']:.2f} vs sequential), "
                 f"occupancy {row['mean_occupancy']:.2f}, "
+                f"p50 {row['latency_ms_p50']:.1f} ms / "
+                f"p99 {row['latency_ms_p99']:.1f} ms, "
                 f"exact={row['exact_vs_single_session']}"
             )
 
+    fleet = None
+    if not args.no_fleet:
+        fleet_nets = tuple(args.fleet_nets) if args.fleet_nets else (
+            FLEET_NETS_SMOKE if args.smoke else FLEET_NETS_FULL
+        )
+        fleet = bench_fleet(
+            fleet_nets, backend=backends[0],
+            pool_cap=max(pools), streams=2 * max(pools), frames=frames,
+        )
+        if not fleet["exact_vs_single_session"]:
+            failures.append("fleet: pooled logits != single-session logits")
+        if not fleet["zero_retrace"]:
+            failures.append("fleet: a bucket pool retraced (ladder broken)")
+        print(
+            f"[serving-bench] {'fleet':>18s} {len(fleet_nets)} nets "
+            f"{fleet['backend']:>6s}: p50 {fleet['latency_ms_p50']:.1f} ms / "
+            f"p99 {fleet['latency_ms_p99']:.1f} ms per tick, "
+            f"{fleet['completed']} streams, exact="
+            f"{fleet['exact_vs_single_session']}, "
+            f"zero_retrace={fleet['zero_retrace']}"
+        )
+
     payload = {
-        "schema": 1,
+        "schema": 2,
         "meta": {
             "smoke": bool(args.smoke),
             "net": net,
@@ -164,10 +289,14 @@ def run(args) -> int:
                 "continuous-batching simulation; Pallas backends interpret "
                 "on non-TPU hosts, so absolute numbers there are "
                 "directional.  exact_vs_single_session and trace_count==1 "
-                "are the serving correctness contract."
+                "are the serving correctness contract.  latency_ms_p50/p99 "
+                "are per-tick wall percentiles with compile excluded "
+                "(warmup tick / warmup round); the fleet cell measures "
+                "round 2 through pre-warmed bucket pools."
             ),
         },
         "results": results,
+        "fleet": fleet,
     }
     default_name = "BENCH_serving.smoke.json" if args.smoke else "BENCH_serving.json"
     out = Path(args.out) if args.out else REPO_ROOT / default_name
@@ -190,6 +319,11 @@ def main(argv=None) -> int:
                     choices=list(api.BACKENDS))
     ap.add_argument("--frames", type=int, default=None,
                     help="frames per sensor stream")
+    ap.add_argument("--fleet-nets", nargs="*", default=None,
+                    help="nets for the multi-tenant FleetRouter cell "
+                         "(default: 3 distinct temporal registry nets)")
+    ap.add_argument("--no-fleet", action="store_true",
+                    help="skip the fleet cell (single-pool sweep only)")
     ap.add_argument("--out", default=None,
                     help="output JSON path (default: <repo>/BENCH_serving.json)")
     return run(ap.parse_args(argv))

@@ -48,9 +48,31 @@ and this script gates, per kernel cell shared with the committed
     runner speed cancels; a cell fails when the fresh ratio degrades more
     than ``--tolerance`` below baseline.
 
+**Serving mode** (``--serving``): CI's ``bench-smoke`` job regenerates the
+serving bench in smoke mode (``benchmarks/serving_bench.py --smoke``) and
+this script gates, against the committed ``BENCH_serving.smoke.json``:
+
+  * **correctness, unconditionally**: every fresh cell (and the fleet
+    cell) must have ``exact_vs_single_session: true`` and
+    ``trace_count == 1`` (fleet: ``zero_retrace``) — pooled serving
+    diverging from a lone `StreamSession`, or the continuous-batching /
+    bucket-ladder contract retracing, fails regardless of tolerance;
+  * **p50/p99 per-tick latency** per (net, pool, backend) cell and per
+    fleet net: gated as a *ratio* vs the baseline percentile with a
+    deliberately generous ``--latency-tolerance`` (default 5.0x) — CI
+    runners are noisy, ticks are millisecond-scale, and absolute wall
+    latency shifts with host generation, so the gate is tuned to catch
+    structural blowups (a retrace per tick, a lost feeder overlap —
+    order-of-magnitude effects), not microdrifts;
+  * **mean pool occupancy** per cell within ``--occupancy-drift``
+    (default 0.10 absolute) of baseline — the arrival/departure
+    simulation is deterministic, so occupancy moving means the scheduler
+    itself changed behavior and the baseline needs a reviewed refresh.
+
     python scripts/check_bench_regression.py BENCH_backends.smoke.json fresh.json
     python scripts/check_bench_regression.py --silicon BENCH_silicon.json fresh.json
     python scripts/check_bench_regression.py --kernels BENCH_kernels.smoke.json fresh.json
+    python scripts/check_bench_regression.py --serving BENCH_serving.smoke.json fresh.json
 
 Exit codes: 0 ok, 1 regression, 2 unusable inputs (missing cells/files).
 """
@@ -225,6 +247,121 @@ def check_kernels(baseline: dict, fresh: dict, tolerance: float) -> int:
     return 0
 
 
+def serving_cells(payload: dict) -> dict:
+    """{(net, pool_size, backend): row} for one BENCH_serving JSON."""
+    return {
+        (r["net"], r["pool_size"], r["backend"]): r
+        for r in payload.get("results", [])
+    }
+
+
+def check_serving(baseline: dict, fresh: dict, latency_tolerance: float,
+                  occupancy_drift: float) -> int:
+    """Gate the serving bench — see module docstring, serving mode."""
+    base_cells = serving_cells(baseline)
+    fresh_cells = serving_cells(fresh)
+    failures = []
+    # 1) correctness is unconditional: every fresh cell, shared or not
+    for key, row in sorted(fresh_cells.items()):
+        name = "{}/pool{}/{}".format(*key)
+        if not row.get("exact_vs_single_session", False):
+            failures.append(
+                f"{name}: pooled logits NOT bit-exact vs single session — "
+                "correctness failure, tolerance does not apply"
+            )
+        if row.get("trace_count") != 1:
+            failures.append(
+                f"{name}: step traced {row.get('trace_count')}x "
+                "(continuous-batching zero-retrace contract broken)"
+            )
+    fleet = fresh.get("fleet")
+    if fleet:
+        if not fleet.get("exact_vs_single_session", False):
+            failures.append("fleet: pooled logits NOT bit-exact vs single "
+                            "session — correctness failure")
+        if not fleet.get("zero_retrace", False):
+            failures.append("fleet: a bucket pool retraced — bucket-ladder "
+                            "zero-retrace contract broken")
+    # 2) p50/p99 latency ratio + occupancy drift vs baseline (shared cells)
+    shared = sorted(set(base_cells) & set(fresh_cells))
+    for key in shared:
+        name = "{}/pool{}/{}".format(*key)
+        base, now = base_cells[key], fresh_cells[key]
+        for pct in ("latency_ms_p50", "latency_ms_p99"):
+            b, n = base.get(pct), now.get(pct)
+            if not b or b != b or n != n:  # missing/NaN baseline: skip
+                continue
+            ratio = n / b
+            ok = ratio <= latency_tolerance
+            print(f"[serving-gate] {name}: {pct} {n:.2f} ms "
+                  f"(baseline {b:.2f} ms, x{ratio:.2f}, "
+                  f"cap x{latency_tolerance:.1f}) "
+                  f"{'ok' if ok else 'REGRESSED'}")
+            if not ok:
+                failures.append(
+                    f"{name}: {pct} blew past {latency_tolerance:.1f}x "
+                    f"baseline: {b:.2f} -> {n:.2f} ms"
+                )
+        db = abs(now["mean_occupancy"] - base["mean_occupancy"])
+        if db > occupancy_drift:
+            failures.append(
+                f"{name}: mean_occupancy drifted {base['mean_occupancy']:.2f}"
+                f" -> {now['mean_occupancy']:.2f} (>{occupancy_drift:.2f} "
+                "abs); the simulation is deterministic — scheduler behavior "
+                "changed, refresh BENCH_serving.smoke.json if intended"
+            )
+    base_fleet = baseline.get("fleet")
+    if fleet and base_fleet:
+        for net, now_s in sorted(fleet.get("per_net", {}).items()):
+            base_s = base_fleet.get("per_net", {}).get(net)
+            if base_s is None:
+                print(f"[serving-gate] note: fleet net {net} not in baseline")
+                continue
+            for pct in ("latency_ms_p50", "latency_ms_p99"):
+                b, n = base_s.get(pct), now_s.get(pct)
+                if not b or b != b or n != n:
+                    continue
+                ratio = n / b
+                ok = ratio <= latency_tolerance
+                print(f"[serving-gate] fleet/{net}: {pct} {n:.2f} ms "
+                      f"(baseline {b:.2f} ms, x{ratio:.2f}) "
+                      f"{'ok' if ok else 'REGRESSED'}")
+                if not ok:
+                    failures.append(
+                        f"fleet/{net}: {pct} blew past "
+                        f"{latency_tolerance:.1f}x baseline: "
+                        f"{b:.2f} -> {n:.2f} ms"
+                    )
+    missing = sorted(set(base_cells) - set(fresh_cells))
+    if missing:
+        print(f"[serving-gate] WARNING: baseline cells absent from fresh "
+              f"run: {missing}", file=sys.stderr)
+    extra = sorted(set(fresh_cells) - set(base_cells))
+    if extra:
+        print(f"[serving-gate] note: new cells not yet in baseline: {extra}")
+    if not shared:
+        print("[serving-gate] no shared cells between baseline and fresh run "
+              "— nothing gated; refresh the committed baseline",
+              file=sys.stderr)
+        return 2
+    if failures:
+        for f in failures:
+            print(f"[serving-gate] FAIL {f}", file=sys.stderr)
+        print(
+            "[serving-gate] if only a latency ratio tripped (exactness and "
+            "trace counts clean) and it reproduces on a clean runner with "
+            "no serving change, refresh the baseline: python "
+            "benchmarks/serving_bench.py --smoke  (then commit "
+            "BENCH_serving.smoke.json)", file=sys.stderr,
+        )
+        return 1
+    print(f"[serving-gate] {len(shared)} cells exact, zero-retrace, within "
+          f"x{latency_tolerance:.1f} latency and {occupancy_drift:.2f} "
+          f"occupancy of baseline"
+          + (", fleet cell clean" if fleet else ""))
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("baseline", help="committed baseline JSON")
@@ -241,6 +378,17 @@ def main(argv=None) -> int:
                     help="gate a BENCH_kernels.json microbench instead of "
                          "the backend bench (bit-exactness + packed/unpacked "
                          "speedup)")
+    ap.add_argument("--serving", action="store_true",
+                    help="gate a BENCH_serving.json bench instead of the "
+                         "backend bench (exactness + zero-retrace + p50/p99 "
+                         "latency ratios + occupancy drift)")
+    ap.add_argument("--latency-tolerance", type=float, default=5.0,
+                    help="serving mode: max fresh/baseline ratio for p50/p99 "
+                         "per-tick latency (default 5.0 — catches structural "
+                         "blowups, not runner noise)")
+    ap.add_argument("--occupancy-drift", type=float, default=0.10,
+                    help="serving mode: max absolute drift of deterministic "
+                         "mean pool occupancy (default 0.10)")
     ap.add_argument("--sim-tolerance", type=float, default=0.15,
                     help="silicon mode: max sim-vs-analytic cycle divergence "
                          "for analytically-schedulable nets (default 0.15)")
@@ -260,6 +408,9 @@ def main(argv=None) -> int:
         return check_silicon(baseline, fresh, args.sim_tolerance, args.drift)
     if args.kernels:
         return check_kernels(baseline, fresh, args.tolerance)
+    if args.serving:
+        return check_serving(baseline, fresh, args.latency_tolerance,
+                             args.occupancy_drift)
 
     failures, lines, shared, missing, extra = compare(
         baseline, fresh, args.tolerance, args.backend

@@ -1,0 +1,154 @@
+"""Append a bench lane's gate table to ``$GITHUB_STEP_SUMMARY``.
+
+One tiny shared formatter for all four bench lanes — CI calls it right
+after each lane's regression gate so a red run is readable from the job
+summary without downloading artifacts:
+
+    python scripts/ci_summary.py --lane backends BENCH_backends.fresh.json
+    python scripts/ci_summary.py --lane kernels  BENCH_kernels.fresh.json
+    python scripts/ci_summary.py --lane silicon  BENCH_silicon.fresh.json
+    python scripts/ci_summary.py --lane serving  BENCH_serving.fresh.json
+
+Writes GitHub-flavored markdown to the file named by the
+``GITHUB_STEP_SUMMARY`` environment variable (appending, as Actions
+expects) and falls back to stdout when unset (local runs).  Always exits
+0 — the regression *gates* live in ``check_bench_regression.py``; this is
+the reporting surface, and a summary failure must never mask a gate
+verdict.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+LANES = ("backends", "kernels", "silicon", "serving")
+
+
+def _md_table(headers, rows) -> str:
+    out = ["| " + " | ".join(headers) + " |",
+           "|" + "|".join("---" for _ in headers) + "|"]
+    for row in rows:
+        out.append("| " + " | ".join(str(c) for c in row) + " |")
+    return "\n".join(out)
+
+
+def _fmt(x, nd=2):
+    if isinstance(x, bool):
+        return "yes" if x else "**NO**"
+    if isinstance(x, float):
+        return f"{x:.{nd}f}"
+    return str(x)
+
+
+def summarize_backends(payload: dict) -> str:
+    rows = [
+        (r["net"], r["workload"], r["batch"], r["backend"],
+         _fmt(r["wall_ms"]), _fmt(r["speedup_vs_ref"]),
+         _fmt(bool(r["exact_vs_ref"])))
+        for r in payload.get("results", [])
+    ]
+    return _md_table(
+        ("net", "workload", "batch", "backend", "wall ms", "vs ref",
+         "exact"), rows)
+
+
+def summarize_kernels(payload: dict) -> str:
+    rows = [
+        (r["name"], _fmt(r["packed_us"]), _fmt(r["dense_us"]),
+         _fmt(r["speedup_packed_vs_unpacked"]),
+         _fmt(float(r["bytes_reduction"]), 1), _fmt(bool(r["bit_exact"])))
+        for r in payload.get("results", [])
+    ]
+    return _md_table(
+        ("kernel", "packed us", "dense us", "speedup", "bytes x",
+         "bit-exact"), rows)
+
+
+def summarize_silicon(payload: dict) -> str:
+    rows = [
+        (r["net"], r["v"], r["source"], r["cycles"],
+         r.get("stall_cycles", 0), _fmt(r["energy_uj"], 3),
+         _fmt(r["inf_per_s"], 0))
+        for r in payload.get("results", [])
+    ]
+    return _md_table(
+        ("net", "V", "source", "cycles", "stalls", "uJ/inf", "inf/s"), rows)
+
+
+def summarize_serving(payload: dict) -> str:
+    rows = [
+        (r["net"], r["pool_size"], r["backend"],
+         _fmt(r["pool_frames_per_s"], 0), _fmt(r["mean_occupancy"]),
+         _fmt(r.get("latency_ms_p50", float("nan"))),
+         _fmt(r.get("latency_ms_p99", float("nan"))),
+         r["trace_count"], _fmt(bool(r["exact_vs_single_session"])))
+        for r in payload.get("results", [])
+    ]
+    table = _md_table(
+        ("net", "pool", "backend", "frames/s", "occupancy", "p50 ms",
+         "p99 ms", "traces", "exact"), rows)
+    fleet = payload.get("fleet")
+    if not fleet:
+        return table
+    frows = [
+        (net, _fmt(s["latency_ms_p50"]), _fmt(s["latency_ms_p99"]),
+         _fmt(s["mean_occupancy"]), s["completed"],
+         " ".join(f"{sz}:{tc}" for sz, tc in s["pools_traced"].items()),
+         s["scale_events"])
+        for net, s in sorted(fleet.get("per_net", {}).items())
+    ]
+    ftable = _md_table(
+        ("fleet net", "p50 ms", "p99 ms", "occupancy", "completed",
+         "traces/rung", "scales"), frows)
+    verdict = (
+        f"fleet: {len(fleet['nets'])} nets, {fleet['completed']} streams, "
+        f"p50 {fleet['latency_ms_p50']:.2f} ms / "
+        f"p99 {fleet['latency_ms_p99']:.2f} ms, exact="
+        f"{_fmt(bool(fleet['exact_vs_single_session']))}, zero-retrace="
+        f"{_fmt(bool(fleet['zero_retrace']))}"
+    )
+    return f"{table}\n\n{verdict}\n\n{ftable}"
+
+
+SUMMARIZERS = {
+    "backends": summarize_backends,
+    "kernels": summarize_kernels,
+    "silicon": summarize_silicon,
+    "serving": summarize_serving,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("bench_json", help="bench JSON to summarize")
+    ap.add_argument("--lane", required=True, choices=LANES)
+    ap.add_argument("--title", default=None,
+                    help="section heading (default: '<lane> bench')")
+    args = ap.parse_args(argv)
+
+    try:
+        payload = json.loads(Path(args.bench_json).read_text())
+        body = SUMMARIZERS[args.lane](payload)
+    except Exception as e:  # reporting must never mask the gate verdict
+        body = f"_could not summarize {args.bench_json}: {e}_"
+    meta = payload.get("meta", {}) if isinstance(payload, dict) else {}
+    host = meta.get("jax_backend", "")
+    title = args.title or f"{args.lane} bench"
+    text = (f"### {title}" + (f" ({host})" if host else "") + "\n\n"
+            + body + "\n\n")
+
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a") as f:
+            f.write(text)
+    else:
+        sys.stdout.write(text)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -549,7 +549,14 @@ class DeployedProgram:
             # causal (kh-1) pad so it matches conv2d_undilated's schedule
             kh = l.kernel[0]
             zp = jnp.pad(z, ((0, 0), ((kh - 1) - (kh - 1) // 2, 0), (0, 0), (0, 0)))
-            eff = self._eff_scale(entry, l.taps * x.shape[-1])
+            # pack granularity: weights are padded to C_in % 4 == 0 at
+            # quantize time; pad the activations to match (zero trits are
+            # free), as spatial_forward does — widths like c=9 need this.
+            # fan-in stays the UNPADDED width: the sim's WeightMemory folds
+            # taps * c_in, and the bit-exactness contract rides on both
+            # paths folding the same float32 constants.
+            eff = self._eff_scale(entry, l.taps * zp.shape[-1])
+            zp = _pad_channels(zp, 4 * entry["packed"].shape[2])
             bc = None if blocks is None else blocks[ti].block_cout
             if backend == "fused":
                 y2 = _dispatch_conv(
@@ -624,6 +631,19 @@ class DeployedProgram:
         from repro.serving import SessionPool
 
         return SessionPool(self, pool_size, backend=backend, **kwargs)
+
+    def serve_fleet(self, name: Optional[str] = None, backend: str = "fused",
+                    **kwargs):
+        """Fleet serving: a `repro.serving.FleetRouter` with this program
+        registered under ``name`` (the graph name by default).  Register
+        further nets on the returned router to serve many tenants —
+        bucketed pools, bounded admission FIFOs, ladder autoscaling, async
+        ingestion.  See `repro.serving.fleet`."""
+        from repro.serving import FleetRouter
+
+        router = FleetRouter(backend=backend, **kwargs)
+        router.register(name or self.graph.name, self)
+        return router
 
     # -- artifact export (repro.artifact) ----------------------------------
 

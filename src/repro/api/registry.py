@@ -211,3 +211,19 @@ register_net(
         channels=8, input_hw=(16, 16), name="cifar10_tnn_wide_smoke"
     ),
 )
+# two more CI-sized temporal variants so the fleet lanes (fleet-smoke,
+# serving bench, launch --fleet) have >= 3 genuinely distinct TCN nets to
+# serve concurrently — different widths, ring depths, and head sizes
+register_net(
+    "dvs_cnn_tcn_micro",
+    lambda: dvs_cnn_tcn_graph(
+        channels=9, input_hw=(32, 32), tcn_steps=6, name="dvs_cnn_tcn_micro"
+    ),
+)
+register_net(
+    "dvs_cnn_tcn_nano",
+    lambda: dvs_cnn_tcn_graph(
+        channels=6, n_classes=6, input_hw=(32, 32), tcn_steps=4,
+        name="dvs_cnn_tcn_nano",
+    ),
+)

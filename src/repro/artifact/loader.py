@@ -118,6 +118,18 @@ class LoadedProgram:
 
         return SessionPool(self, pool_size, backend=backend, **kwargs)
 
+    def serve_fleet(self, name: Optional[str] = None, backend: str = "bitsim",
+                    **kwargs):
+        """A `repro.serving.FleetRouter` with this artifact registered
+        under ``name`` (the artifact's program name by default) — a fleet
+        tenant straight from the shipped ``.cutie``, no graph needed.
+        Register further programs on the returned router to mix tenants."""
+        from repro.serving import FleetRouter
+
+        router = FleetRouter(backend=backend, **kwargs)
+        router.register(name or self.graph.name, self)
+        return router
+
     # -- silicon model -----------------------------------------------------
 
     def silicon_report(self, v: float = 0.5, hw=None, source: str = "sim"):

@@ -15,8 +15,16 @@ Two serving paths:
     single-stream `StreamSession`s (bit-exact) and exits non-zero on any
     mismatch or non-finite logits — the CI ``serve-smoke`` gate.
 
+  * CUTIE fleet serving (``--fleet``): the multi-tenant version — >= 3
+    distinct registry TCN nets registered on one
+    `repro.serving.FleetRouter`, staggered arrivals interleaved across
+    buckets, ladder autoscaling, async ingestion, and the same per-stream
+    bit-exactness gate plus the zero-retrace pool audit — the CI
+    ``fleet-smoke`` gate.
+
     PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --smoke --tokens 16
     PYTHONPATH=src python -m repro.launch.serve --dvs --pool 4 --frames 6 --backend fused
+    PYTHONPATH=src python -m repro.launch.serve --fleet --pool 4 --frames 5 --out fleet.json
 
     The DVS default backend is "fused": conv+threshold(+pool) in one kernel
     launch per layer, int8 ternary activations between layers — the
@@ -186,6 +194,129 @@ def serve_dvs(args) -> int:
     return 0
 
 
+def serve_fleet_scenario(args) -> int:
+    """Multi-tenant fleet simulation over a `repro.serving.FleetRouter`.
+
+    ``--fleet-nets`` registry nets (>= 3 distinct TCN nets by default) are
+    registered as fleet tenants; each gets ``--streams`` sensors whose
+    arrivals interleave across nets (sensor s of net i arrives at tick
+    i + s * n_nets), so every bucket sees admissions, departures, pool
+    autoscaling, and FIFO spill mid-flight.  The CI ``fleet-smoke`` gate:
+    exit non-zero on any pooled-vs-lone-session logit mismatch, non-finite
+    logits, incomplete streams, or any bucket pool tracing more than once
+    (the zero-retrace bucket-ladder contract).  ``--out`` writes the full
+    fleet stats report (per-net p50/p99 per pool size, scale events,
+    trace audit) as JSON for artifact upload.
+    """
+    import json
+
+    from repro.api import get_net
+    from repro.data.pipeline import DVSEventPipeline
+    from repro.serving import FleetRouter, StreamRequest
+
+    net_names = [n.strip() for n in args.fleet_nets.split(",") if n.strip()]
+    if len(net_names) < 2:
+        print(f"[serve-fleet] need >= 2 nets, got {net_names}", file=sys.stderr)
+        return 2
+    n_streams = args.streams or 4
+    router = FleetRouter(
+        backend=args.backend,
+        max_pool_size=args.pool,
+        queue_limit=args.queue_limit,
+        shrink_after=args.shrink_after,
+        ingest=args.ingest,
+        sharding="auto" if args.shard else None,
+    )
+    deps, clips = {}, {}
+    for idx, name in enumerate(net_names):
+        prog = get_net(name)
+        g = prog.graph
+        if not g.is_temporal:
+            print(f"[serve-fleet] {name} is not temporal; pick TCN nets",
+                  file=sys.stderr)
+            return 2
+        pipe = DVSEventPipeline(
+            n_streams, steps=args.frames, hw=g.input_hw[0],
+            n_classes=g.n_classes, seed=args.seed + idx,
+        )
+        frames, labels = pipe.next_batch()
+        deps[name] = prog.quantize(
+            prog.init(jax.random.PRNGKey(args.seed + idx)), calib=frames
+        )
+        router.register(name, deps[name])
+        for s in range(n_streams):
+            sid = f"{name}/sensor-{s}"
+            clips[sid] = np.asarray(frames[s])
+            router.submit(StreamRequest(
+                stream_id=sid, frames=clips[sid], label=int(labels[s]),
+                arrival=idx + s * len(net_names), net=name,
+            ))
+
+    t0 = time.time()
+    results = router.run()
+    wall = time.time() - t0
+    stats = router.stats()
+    agg = stats["aggregate"]
+
+    threaded = any(s["ingest_threaded"] for s in stats["nets"].values())
+    print(f"[serve-fleet] {len(net_names)} nets x {n_streams} sensors x "
+          f"{args.frames} frames ({args.backend}, ladder cap {args.pool}, "
+          f"ingest={'thread' if threaded else 'sync'})")
+    print(f"[serve-fleet] {agg['frames_processed']} frames, "
+          f"{agg['completed']} streams in {agg['ticks']} ticks, {wall:.2f} s; "
+          f"fleet p50 {agg['latency_ms_p50']:.1f} ms / "
+          f"p99 {agg['latency_ms_p99']:.1f} ms per tick")
+    failures = []
+    for name in net_names:
+        s = stats["nets"][name]
+        scale = "".join(
+            f" {e['from_size']}->{e['to_size']}" for e in s["scale_events"]
+        ) or " (none)"
+        print(f"[serve-fleet]   {name}: completed {s['completed']}, "
+              f"traced {s['pools_traced']}, scale{scale}, "
+              f"p50 {s['latency_ms_p50']:.1f} ms")
+        # zero-retrace contract: every pool a bucket ever ran traced once
+        bad = {sz: tc for sz, tc in s["pools_traced"].items() if tc > 1}
+        if bad:
+            failures.append(f"{name}: retraced pools {bad}")
+        if not any(tc == 1 for tc in s["pools_traced"].values()):
+            failures.append(f"{name}: no pool ever traced (bucket never stepped)")
+
+    # per-stream bit-exactness vs lone StreamSessions
+    finite = all(np.isfinite(r.logits).all() for r in results)
+    checked = mismatched = 0
+    for r in results:
+        session = deps[r.net].stream(batch=1, backend=args.backend)
+        clip = clips[r.stream_id]
+        for t in range(clip.shape[0]):
+            ref = session.step(clip[t][None])
+        checked += 1
+        if not (np.asarray(ref)[0] == r.logits).all():
+            mismatched += 1
+            failures.append(f"{r.stream_id}: pooled logits != lone session")
+    print(f"[serve-fleet] bit-exactness: {checked} streams replayed, "
+          f"{mismatched} mismatches; logits finite: {finite}")
+    if not finite:
+        failures.append("non-finite logits")
+    if len(results) != len(net_names) * n_streams:
+        failures.append(
+            f"{len(results)}/{len(net_names) * n_streams} streams completed")
+
+    if args.out:
+        report = {"scenario": {
+            "nets": net_names, "streams_per_net": n_streams,
+            "frames": args.frames, "backend": args.backend,
+            "ladder_cap": args.pool, "wall_s": wall,
+        }, "stats": stats, "failures": failures}
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2, default=float)
+        print(f"[serve-fleet] report -> {args.out}")
+    router.close()
+    for msg in failures:
+        print(f"[serve-fleet] FAIL: {msg}", file=sys.stderr)
+    return 1 if failures else 0
+
+
 def _verify_pool_vs_sessions(deployed, results, frames, backend, check: int):
     """Replay the first ``check`` streams through independent batch-1
     `StreamSession`s; pooled final logits must match bit-for-bit."""
@@ -233,7 +364,32 @@ def main(argv=None):
     ap.add_argument("--pool", type=int, default=4,
                     help="dvs: SessionPool slots (fixed jitted batch width)")
     ap.add_argument("--streams", type=int, default=0,
-                    help="dvs: total sensor streams to serve (0 = 2x pool)")
+                    help="dvs: total sensor streams to serve (0 = 2x pool); "
+                         "with --fleet: streams PER NET (0 = 4), arrivals "
+                         "staggered across the --fleet-nets buckets (see "
+                         "--queue-limit/--shrink-after/--ingest for the "
+                         "fleet admission and autoscale knobs)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="dvs: multi-tenant FleetRouter scenario over "
+                         "--fleet-nets instead of a single SessionPool "
+                         "(--pool becomes the bucket-ladder cap)")
+    ap.add_argument("--fleet-nets",
+                    default="dvs_cnn_tcn_smoke,dvs_cnn_tcn_micro,dvs_cnn_tcn_nano",
+                    help="fleet: comma-separated registry nets to register "
+                         "as tenants (>= 2, temporal only)")
+    ap.add_argument("--queue-limit", type=int, default=64,
+                    help="fleet: bounded admission FIFO per bucket; "
+                         "overflow raises FleetQueueFull")
+    ap.add_argument("--shrink-after", type=int, default=3,
+                    help="fleet: calm ticks before a bucket shrinks down "
+                         "the ladder (grow is immediate)")
+    ap.add_argument("--ingest", default="auto",
+                    choices=["auto", "thread", "sync", "off"],
+                    help="fleet: host-side frame ingestion — feeder thread "
+                         "with double buffers (auto/thread), synchronous "
+                         "assembly (sync), or no prefetch at all (off)")
+    ap.add_argument("--out", default=None, metavar="FILE.json",
+                    help="fleet: write the full stats report as JSON")
     ap.add_argument("--check-streams", type=int, default=2,
                     help="dvs: streams replayed through single sessions for "
                          "the bit-exactness gate")
@@ -241,6 +397,8 @@ def main(argv=None):
                     help="dvs: shard the pool axis across local devices")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+    if args.fleet:
+        return serve_fleet_scenario(args)
     if args.dvs:
         return serve_dvs(args)
     return serve_lm(args)

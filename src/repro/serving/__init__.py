@@ -3,14 +3,18 @@
 The serving story for the paper's autonomous mode: a `SessionPool`
 multiplexes independent DVS streams onto one jitted `stream_step` with
 slot-masked ring state and per-slot cursors (continuous batching — no
-retrace on admit/evict), and `ContinuousBatcher` drives arrivals and
-departures over it.  Entry point: `DeployedProgram.serve(pool_size,
-backend)`.
+retrace on admit/evict), `ContinuousBatcher` drives arrivals and
+departures over it, and `FleetRouter` scales that to many tenants running
+*different* nets concurrently — bucketed pools per net, bounded admission
+FIFOs, ladder-based autoscaling, and async host-side frame ingestion.
+Entry points: `DeployedProgram.serve(pool_size, backend)` for one net,
+`DeployedProgram.serve_fleet()` / `repro.serving.serve_fleet({...})` for
+many.
 
 Layering: `masking` (pure state algebra) <- `pool` (mechanism) <-
-`scheduler` (policy).  `repro.api` stays importable without this package;
-this package imports `repro.api.program` only inside `SessionPool` for the
-backend check.
+`scheduler` (single-net policy) <- `fleet` (multi-net policy).
+`repro.api` stays importable without this package; this package imports
+`repro.api.program` only inside `SessionPool` for the backend check.
 """
 
 from repro.serving.masking import (
@@ -21,10 +25,26 @@ from repro.serving.masking import (
     ordered_windows,
     scatter_slot,
 )
+from repro.serving.fleet import (
+    FleetQueueFull,
+    FleetRouter,
+    FrameFeeder,
+    NetBucket,
+    ScaleEvent,
+    bucket_ladder,
+    serve_fleet,
+)
 from repro.serving.pool import PoolFullError, SessionPool
 from repro.serving.scheduler import ContinuousBatcher, StreamRequest, StreamResult
 
 __all__ = [
+    "FleetQueueFull",
+    "FleetRouter",
+    "FrameFeeder",
+    "NetBucket",
+    "ScaleEvent",
+    "bucket_ladder",
+    "serve_fleet",
     "PoolState",
     "clear_slot",
     "gather_slot",

@@ -203,16 +203,31 @@ class SessionPool:
 
     # -- the hot path ------------------------------------------------------
 
-    def step(self, frames: Mapping[str, jax.Array]) -> Dict[str, jax.Array]:
-        """One pool tick.  ``frames`` maps stream id -> `[H, W, C]` frame
-        (a leading length-1 batch axis is accepted and squeezed); streams
-        that skip this tick keep their ring frozen via the slot mask.
-        Returns per-stream logits for exactly the streams that stepped.
+    def prepare(
+        self,
+        frames: Mapping[str, jax.Array],
+        out_batch: Optional[np.ndarray] = None,
+        out_active: Optional[np.ndarray] = None,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Host-side batch assembly: slot-scatter ``frames`` into a
+        `[P, *frame_shape]` float32 batch and a `[P]` bool active mask.
+
+        This is the ingestion half of a tick — pure numpy, no device work —
+        split out so a fleet feeder thread can run it for the *next* tick
+        while the device executes the current one (`repro.serving.fleet
+        .FrameFeeder`).  ``out_batch``/``out_active`` reuse caller-owned
+        buffers (the feeder's pinned double buffers) instead of allocating.
         """
         for sid in frames:
             self._require(sid)
-        batch = np.zeros((self.pool_size, *self.frame_shape), np.float32)
-        active = np.zeros((self.pool_size,), bool)
+        if out_batch is None:
+            out_batch = np.zeros((self.pool_size, *self.frame_shape), np.float32)
+        else:
+            out_batch.fill(0.0)
+        if out_active is None:
+            out_active = np.zeros((self.pool_size,), bool)
+        else:
+            out_active.fill(False)
         for sid, f in frames.items():
             f = np.asarray(f, np.float32)
             if f.shape == (1, *self.frame_shape):
@@ -221,13 +236,30 @@ class SessionPool:
                 raise ValueError(
                     f"stream {sid!r}: frame shape {f.shape} != {self.frame_shape}"
                 )
-            batch[self._slot_of[sid]] = f
-            active[self._slot_of[sid]] = True
+            out_batch[self._slot_of[sid]] = f
+            out_active[self._slot_of[sid]] = True
+        return out_batch, out_active
+
+    def step_prepared(self, batch: np.ndarray, active: np.ndarray) -> jax.Array:
+        """The device half of a tick: run the jitted step on an assembled
+        `(batch, active)` pair (see `prepare`) and return the full `[P,
+        n_classes]` logits — callers map slots back to stream ids.  The
+        host buffers are copied onto the device at dispatch, so a feeder
+        may refill them as soon as this returns (double buffering)."""
         logits, self.state = self._step(
             self.state,
             self._put(jnp.asarray(batch)),
             self._put(jnp.asarray(active)),
         )
+        return logits
+
+    def step(self, frames: Mapping[str, jax.Array]) -> Dict[str, jax.Array]:
+        """One pool tick.  ``frames`` maps stream id -> `[H, W, C]` frame
+        (a leading length-1 batch axis is accepted and squeezed); streams
+        that skip this tick keep their ring frozen via the slot mask.
+        Returns per-stream logits for exactly the streams that stepped.
+        """
+        logits = self.step_prepared(*self.prepare(frames))
         return {sid: logits[self._slot_of[sid]] for sid in frames}
 
     # -- introspection -----------------------------------------------------

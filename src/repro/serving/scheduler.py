@@ -16,15 +16,30 @@ continuous batching scaled down to the paper's always-on sensor workload.
 
 Ticks are logical time: a request with ``arrival=k`` is admissible from
 tick k onward, which is how serve.py's simulation staggers sensors coming
-online.  The batcher records per-tick occupancy so the serving report can
-say how full the fixed-shape batch actually ran.
+online.  The batcher records per-tick occupancy AND per-tick wall latency
+(tagged with the pool size it ran at) so the serving report can say how
+full the fixed-shape batch actually ran and what the p50/p99 tick latency
+was per bucket size (`benchmarks/serving_bench.py`).
+
+Fleet hooks (used by `repro.serving.fleet`, inert otherwise):
+
+  * ``feeder`` — an async ingestion double-buffer (`fleet.FrameFeeder`):
+    when present, `tick()` consumes the batch the feeder assembled during
+    the *previous* device step and kicks off assembly of the next one, so
+    host ingestion and device compute pipeline.
+  * `swap_pool(new_pool)` — migrate every in-flight stream into another
+    (typically differently-sized) pool via evict/admit-with-state, which
+    is how autoscaling rides the bucket ladder with bit-identical logits.
+  * `cancel(stream_id)` — early departure of a queued OR in-flight stream
+    (a sensor going offline before its clip ends).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -36,12 +51,15 @@ from repro.serving.pool import SessionPool
 class StreamRequest:
     """One sensor stream to serve: ``frames`` is the `[T, H, W, C]` clip,
     ``arrival`` the first tick the stream exists, ``label`` an optional
-    ground-truth class for accuracy reporting."""
+    ground-truth class for accuracy reporting.  ``net`` tags the stream
+    with the registry net it runs (the fleet router's routing key; a lone
+    batcher falls back to its pool's program name for stats)."""
 
     stream_id: str
     frames: jax.Array  # [T, H, W, C]
     label: Optional[int] = None
     arrival: int = 0
+    net: Optional[str] = None
 
     def __post_init__(self):
         if getattr(self.frames, "ndim", 0) != 4:
@@ -63,6 +81,7 @@ class StreamResult:
     admitted_tick: int
     finished_tick: int
     label: Optional[int] = None
+    net: Optional[str] = None
 
     @property
     def pred(self) -> int:
@@ -77,15 +96,20 @@ class ContinuousBatcher:
     """FIFO admission over a `SessionPool`; finished streams free their
     slot for the head of the queue on the next tick."""
 
-    def __init__(self, pool: SessionPool):
+    def __init__(self, pool: SessionPool, feeder=None):
         self.pool = pool
+        self.feeder = feeder
         self._queue: Deque[StreamRequest] = deque()
         self._inflight: Dict[str, StreamRequest] = {}
         self._next_frame: Dict[str, int] = {}
         self._admitted_tick: Dict[str, int] = {}
         self.results: List[StreamResult] = []
+        self.cancelled: List[str] = []
         self.tick_index = 0
         self.occupancy_trace: List[float] = []
+        # (pool_size, seconds) per non-idle tick — the latency sample the
+        # serving bench turns into p50/p99 per bucket size
+        self.latency_trace: List[Tuple[int, float]] = []
 
     # -- submission --------------------------------------------------------
 
@@ -106,9 +130,75 @@ class ContinuousBatcher:
         for r in requests:
             self.submit(r)
 
+    def cancel(self, stream_id: str) -> str:
+        """Early departure of a stream that has not finished its clip.
+
+        A queued request is dropped before ever touching the pool
+        (returns ``"queued"``); an in-flight stream is evicted mid-clip —
+        its slot frees for the next tick's refill, its partial state is
+        discarded, and no `StreamResult` is recorded (returns
+        ``"inflight"``).  Unknown/already-finished ids raise KeyError.
+        """
+        for req in self._queue:
+            if req.stream_id == stream_id:
+                self._queue.remove(req)
+                self.cancelled.append(stream_id)
+                return "queued"
+        if stream_id in self._inflight:
+            self.pool.evict(stream_id)
+            del self._inflight[stream_id], self._next_frame[stream_id]
+            del self._admitted_tick[stream_id]
+            self.cancelled.append(stream_id)
+            if self.feeder is not None:
+                self.feeder.invalidate()
+            return "inflight"
+        raise KeyError(f"unknown or finished stream {stream_id!r}")
+
     @property
     def pending(self) -> bool:
         return bool(self._queue or self._inflight)
+
+    @property
+    def queue_depth(self) -> int:
+        """Streams waiting for a slot (admitted FIFO, arrival-gated)."""
+        return len(self._queue)
+
+    @property
+    def inflight_count(self) -> int:
+        return len(self._inflight)
+
+    def admissible(self, at_tick: Optional[int] = None) -> int:
+        """Queued streams whose ``arrival`` has already passed — the
+        demand the autoscaler sees (future arrivals don't count)."""
+        t = self.tick_index if at_tick is None else at_tick
+        return sum(1 for r in self._queue if r.arrival <= t)
+
+    # -- pool migration (the autoscaler's mechanism) -----------------------
+
+    def swap_pool(self, new_pool: SessionPool) -> SessionPool:
+        """Migrate every in-flight stream into ``new_pool`` (evict with
+        state -> admit with state: bit-identical from then on, tested) and
+        make it the batcher's pool.  Returns the old pool — the caller
+        (the fleet bucket) caches it so re-scaling back to that size never
+        retraces.  Raises ValueError when the in-flight streams don't fit.
+        """
+        if new_pool is self.pool:
+            return self.pool
+        if new_pool.free_slots < len(self._inflight):
+            raise ValueError(
+                f"cannot swap: {len(self._inflight)} in-flight streams, "
+                f"target pool has {new_pool.free_slots} free slots"
+            )
+        old = self.pool
+        # admission order preserved so slot assignment is deterministic
+        for sid in list(old.active_streams):
+            if sid in self._inflight:
+                new_pool.admit(sid, state=old.evict(sid))
+        self.pool = new_pool
+        if self.feeder is not None:
+            # prefetched slot assignments refer to the old pool's geometry
+            self.feeder.invalidate()
+        return old
 
     # -- the loop ----------------------------------------------------------
 
@@ -128,19 +218,64 @@ class ContinuousBatcher:
             self._admitted_tick[req.stream_id] = self.tick_index
         self._queue.extendleft(reversed(waiting))
 
+    def _assemble(self) -> Tuple[np.ndarray, np.ndarray]:
+        """The tick's (batch, active) pair: the feeder's prefetched buffer
+        when one is valid (patched for admissions/cancellations since the
+        prefetch), else a synchronous `pool.prepare`."""
+        prefetch = self.feeder.take() if self.feeder is not None else None
+        if prefetch is None:
+            return self.pool.prepare({
+                sid: req.frames[self._next_frame[sid]]
+                for sid, req in self._inflight.items()
+            })
+        batch, active, covered = prefetch
+        # clear lanes whose stream left (or moved) since the prefetch
+        for sid, slot in covered.items():
+            if sid not in self._inflight or self.pool.slot_of(sid) != slot:
+                active[slot] = False
+                batch[slot] = 0.0
+        # fill lanes the prefetch could not know about (new admissions)
+        for sid, req in self._inflight.items():
+            slot = self.pool.slot_of(sid)
+            if covered.get(sid) != slot:
+                batch[slot] = np.asarray(
+                    req.frames[self._next_frame[sid]], np.float32
+                )
+                active[slot] = True
+        return batch, active
+
+    def _kick_feeder(self) -> None:
+        """Start assembling the NEXT tick's batch on the feeder thread
+        while the device is still chewing on the one just dispatched.
+        Every stream still in flight here steps next tick (finished ones
+        were just evicted), so the assignment is exact modulo admissions,
+        which `_assemble` patches in at consume time."""
+        if self.feeder is None:
+            return
+        items = [
+            (sid, self.pool.slot_of(sid), req.frames, self._next_frame[sid])
+            for sid, req in self._inflight.items()
+        ]
+        self.feeder.prefetch(self.pool.pool_size, self.pool.frame_shape, items)
+
     def tick(self) -> Dict[str, jax.Array]:
         """One scheduling round: admit -> step -> evict.  Returns the
         per-stream logits of every stream that consumed a frame.  A tick
         with nothing in flight (gap before the next arrival) only advances
         logical time."""
         self._admit_ready()
-        frames = {
-            sid: req.frames[self._next_frame[sid]]
-            for sid, req in self._inflight.items()
-        }
-        out = self.pool.step(frames) if frames else {}
-        self.occupancy_trace.append(len(frames) / self.pool.pool_size)
-        for sid in list(out):
+        stepping = list(self._inflight)
+        self.occupancy_trace.append(len(stepping) / self.pool.pool_size)
+        if not stepping:
+            if self.feeder is not None:
+                self.feeder.invalidate()
+            self.tick_index += 1
+            return {}
+        t0 = time.perf_counter()
+        batch, active = self._assemble()
+        logits = self.pool.step_prepared(batch, active)
+        out = {sid: logits[self.pool.slot_of(sid)] for sid in stepping}
+        for sid in stepping:
             self._next_frame[sid] += 1
             req = self._inflight[sid]
             if self._next_frame[sid] >= req.frames.shape[0]:
@@ -153,10 +288,15 @@ class ContinuousBatcher:
                         admitted_tick=self._admitted_tick[sid],
                         finished_tick=self.tick_index,
                         label=req.label,
+                        net=req.net,
                     )
                 )
                 del self._inflight[sid], self._next_frame[sid]
                 del self._admitted_tick[sid]
+        self._kick_feeder()
+        self.latency_trace.append(
+            (self.pool.pool_size, time.perf_counter() - t0)
+        )
         self.tick_index += 1
         return out
 
@@ -171,17 +311,48 @@ class ContinuousBatcher:
 
     # -- reporting ---------------------------------------------------------
 
-    def stats(self) -> Dict[str, float]:
-        """Serving-report aggregates: ticks run, streams completed, mean
-        pool occupancy, and accuracy over the labeled requests."""
+    def _net_of(self, req_or_result) -> str:
+        name = req_or_result.net
+        if name is None:
+            name = getattr(self.pool.deployed.graph, "name", "?")
+        return name
+
+    def stats(self) -> Dict:
+        """Serving-report aggregates: ticks run, streams completed, queue
+        depth, in-flight count, mean pool occupancy, accuracy over the
+        labeled requests, per-net completed/in-flight/queued breakdowns,
+        and p50/p99 per-tick latency (over non-idle ticks)."""
         occ = self.occupancy_trace
         done = self.results
         acc = [r.correct for r in done if r.correct is not None]
+        per_net: Dict[str, Dict[str, int]] = {}
+
+        def bump(name: str, field: str) -> None:
+            row = per_net.setdefault(
+                name, {"completed": 0, "inflight": 0, "queued": 0}
+            )
+            row[field] += 1
+
+        for r in done:
+            bump(self._net_of(r), "completed")
+        for req in self._inflight.values():
+            bump(self._net_of(req), "inflight")
+        for req in self._queue:
+            bump(self._net_of(req), "queued")
+        lat = np.array([s for _, s in self.latency_trace], np.float64)
         return {
             "ticks": self.tick_index,
             "completed": len(done),
+            "cancelled": len(self.cancelled),
+            "queue_depth": self.queue_depth,
+            "inflight": self.inflight_count,
             "frames_processed": sum(r.n_frames for r in done)
             + sum(self._next_frame.values()),
             "mean_occupancy": float(np.mean(occ)) if occ else 0.0,
             "accuracy": float(np.mean(acc)) if acc else float("nan"),
+            "per_net": per_net,
+            "latency_ms_p50": float(np.percentile(lat, 50) * 1e3)
+            if lat.size else float("nan"),
+            "latency_ms_p99": float(np.percentile(lat, 99) * 1e3)
+            if lat.size else float("nan"),
         }

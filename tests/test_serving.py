@@ -341,6 +341,142 @@ class TestContinuousBatcher:
         assert acc in (0.0, 1.0)  # only the labeled stream counts
 
 
+class TestSchedulerEdgeCases:
+    """The corners the fleet layer leans on: cancellation of pending and
+    in-flight streams, refill ordering under overflow, pool swaps
+    mid-flight, and the prepare/step_prepared split."""
+
+    def test_cancel_queued_request_never_touches_pool(self, deployed):
+        frames = clips_for(deployed.graph, 3, 3, seed=20)
+        pool = SessionPool(deployed, 1, backend="ref")
+        batcher = ContinuousBatcher(pool)
+        batcher.submit(StreamRequest("a", frames[0]))
+        batcher.submit(StreamRequest("b", frames[1]))   # waits in queue
+        batcher.tick()
+        assert batcher.cancel("b") == "queued"
+        results = batcher.run()
+        assert {r.stream_id for r in results} == {"a"}
+        stats = batcher.stats()
+        assert stats["cancelled"] == 1 and batcher.cancelled == ["b"]
+        assert pool.trace_count == 1
+
+    def test_cancel_inflight_frees_slot_and_keeps_neighbors_exact(
+        self, deployed
+    ):
+        """Mid-clip departure: the cancelled stream vanishes without a
+        StreamResult, its slot refills next tick, and the surviving
+        stream's logits stay bit-exact through the churn."""
+        frames = clips_for(deployed.graph, 3, 5, seed=21)
+        pool = SessionPool(deployed, 2, backend="ref")
+        batcher = ContinuousBatcher(pool)
+        batcher.submit(StreamRequest("keep", frames[0]))
+        batcher.submit(StreamRequest("drop", frames[1]))
+        batcher.submit(StreamRequest("next", frames[2]))  # queued (pool full)
+        batcher.tick(); batcher.tick()
+        assert batcher.cancel("drop") == "inflight"
+        results = batcher.run()
+        assert {r.stream_id for r in results} == {"keep", "next"}
+        oracle = deployed.stream(batch=1, backend="ref")
+        for t in range(5):
+            want = oracle.step(frames[0:1, t])
+        by_id = {r.stream_id: r for r in results}
+        exact(by_id["keep"].logits, np.asarray(want)[0])
+        assert pool.trace_count == 1
+        with pytest.raises(KeyError):
+            batcher.cancel("drop")                      # already gone
+        with pytest.raises(KeyError):
+            batcher.cancel("keep")                      # already finished
+
+    def test_refill_ordering_under_overflow_is_fifo(self, deployed):
+        """8 streams through 2 slots: slots refill in submission order
+        among admissible requests — the earliest-submitted queued stream
+        always takes the freed slot."""
+        frames = clips_for(deployed.graph, 8, 2, seed=22)
+        batcher = ContinuousBatcher(SessionPool(deployed, 2, backend="ref"))
+        for i in range(8):
+            batcher.submit(StreamRequest(f"s{i}", frames[i]))  # all arrival=0
+        results = batcher.run()
+        admitted = {r.stream_id: r.admitted_tick for r in results}
+        order = sorted(admitted, key=lambda sid: (admitted[sid], int(sid[1:])))
+        assert order == [f"s{i}" for i in range(8)]
+        # pairwise: s0,s1 first, then s2,s3 on the freed slots, ...
+        for i in range(8):
+            assert admitted[f"s{i}"] == (i // 2) * 2
+
+    def test_swap_pool_midflight_is_bit_exact(self, deployed):
+        """The autoscaler's mechanism: migrating in-flight streams to a
+        wider pool (and back down) preserves every subsequent logit."""
+        frames = clips_for(deployed.graph, 2, 6, seed=23)
+        small = SessionPool(deployed, 2, backend="ref")
+        wide = SessionPool(deployed, 4, backend="ref")
+        batcher = ContinuousBatcher(small)
+        oracles = [deployed.stream(batch=1, backend="ref") for _ in range(2)]
+        batcher.submit(StreamRequest("a", frames[0]))
+        batcher.submit(StreamRequest("b", frames[1]))
+        out = [batcher.tick(), batcher.tick()]
+        assert batcher.swap_pool(wide) is small         # old pool handed back
+        assert batcher.swap_pool(wide) is wide          # no-op on same pool
+        out += [batcher.tick() for _ in range(4)]
+        for t in range(6):
+            exact(out[t]["a"], np.asarray(oracles[0].step(frames[0:1, t]))[0])
+            exact(out[t]["b"], np.asarray(oracles[1].step(frames[1:2, t]))[0])
+        assert small.trace_count == 1 and wide.trace_count == 1
+        assert small.occupancy == 0.0                   # fully migrated out
+
+    def test_swap_pool_rejects_too_small_target(self, deployed):
+        frames = clips_for(deployed.graph, 2, 4, seed=24)
+        batcher = ContinuousBatcher(SessionPool(deployed, 2, backend="ref"))
+        batcher.submit(StreamRequest("a", frames[0]))
+        batcher.submit(StreamRequest("b", frames[1]))
+        batcher.tick()
+        tiny = SessionPool(deployed, 1, backend="ref")
+        with pytest.raises(ValueError, match="cannot swap"):
+            batcher.swap_pool(tiny)
+
+    def test_stats_expose_queue_depth_and_per_net(self, deployed):
+        frames = clips_for(deployed.graph, 4, 3, seed=25)
+        batcher = ContinuousBatcher(SessionPool(deployed, 1, backend="ref"))
+        batcher.submit(StreamRequest("a", frames[0], net="net_a"))
+        batcher.submit(StreamRequest("b", frames[1], net="net_b"))
+        batcher.submit(StreamRequest("c", frames[2], net="net_a"))
+        batcher.submit(StreamRequest("d", frames[3]))   # no net: pool's name
+        batcher.tick()
+        stats = batcher.stats()
+        assert stats["queue_depth"] == 3 and stats["inflight"] == 1
+        assert batcher.admissible() == 3
+        assert stats["per_net"]["net_a"] == {
+            "completed": 0, "inflight": 1, "queued": 1}
+        assert stats["per_net"]["net_b"]["queued"] == 1
+        batcher.run()
+        stats = batcher.stats()
+        assert stats["queue_depth"] == 0 and stats["inflight"] == 0
+        assert stats["per_net"]["net_a"]["completed"] == 2
+        # the un-tagged stream falls back to the serving program's name
+        assert stats["per_net"]["tiny_serving"]["completed"] == 1
+        assert stats["latency_ms_p50"] > 0.0
+        assert stats["latency_ms_p99"] >= stats["latency_ms_p50"]
+
+    def test_prepare_step_prepared_equals_step(self, deployed):
+        """The split the feeder pipelines through is just step() unbundled:
+        same logits, and caller-owned buffers are reused in place."""
+        frames = clips_for(deployed.graph, 2, 3, seed=26)
+        a = SessionPool(deployed, 2, backend="ref")
+        b = SessionPool(deployed, 2, backend="ref")
+        for p in (a, b):
+            p.admit("x"); p.admit("y")
+        buf = np.full((2, *a.frame_shape), 7.0, np.float32)
+        act = np.ones((2,), bool)
+        for t in range(3):
+            fr = {"x": frames[0, t], "y": frames[1, t]}
+            batch, active = a.prepare(fr, out_batch=buf, out_active=act)
+            assert batch is buf and active is act       # in-place reuse
+            logits = a.step_prepared(batch, active)
+            got = {sid: logits[a.slot_of(sid)] for sid in fr}
+            want = b.step(fr)
+            exact(got["x"], want["x"]); exact(got["y"], want["y"])
+        assert a.trace_count == 1
+
+
 # ---------------------------------------------------------------------------
 # batch-axis sharding (forced multi-device CPU, subprocess)
 # ---------------------------------------------------------------------------
