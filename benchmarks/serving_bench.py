@@ -16,7 +16,13 @@ trajectory for `repro.serving.SessionPool` continuous batching.  For every
   * samples per-tick wall latency and reports p50/p99 percentiles
     (compile excluded via warmup), per cell and — in the multi-tenant
     fleet cell (>= 3 distinct nets on one `FleetRouter`, measured on a
-    pre-warmed second round) — per net and per bucket pool size.
+    pre-warmed second round) — per net and per bucket pool size,
+  * runs an activity-gated cell (schema 3): the same pool under an
+    `ActivityGate` on a bursty duty-cycle trace, gated per-stream logits
+    checked bit-exact against lone sessions fed exactly the frames
+    `ActivityGate.plan` selects, and the skipped frames priced in uJ via
+    `repro.serving.energy_summary` — energy-per-classification must land
+    strictly below the ungated baseline.
 
 On a CPU host the Pallas backends run in interpreter mode, so wall-clock is
 directional (the JSON's ``meta.jax_backend`` records the host); the
@@ -44,9 +50,11 @@ sys.path.insert(0, str(REPO_ROOT / "src"))
 
 from repro import api  # noqa: E402
 from repro.serving import (  # noqa: E402
+    ActivityGate,
     ContinuousBatcher,
     FleetRouter,
     StreamRequest,
+    energy_summary,
 )
 
 FULL_NET = "dvs_cnn_tcn"
@@ -213,6 +221,80 @@ def bench_fleet(net_names, backend: str, pool_cap: int, streams: int,
     }
 
 
+def bench_gated(deployed, backend: str, pool_size: int, streams: int,
+                frames: int, duty: float, seed: int = 5):
+    """The schema-3 activity-gated cell: bursty duty-cycle traces through
+    a gated `ContinuousBatcher`, differentially verified against lone
+    sessions fed exactly the `ActivityGate.plan`-selected frames, with the
+    skipped frames priced in uJ on the sim counters."""
+    from repro.data.pipeline import DVSEventPipeline, KWSSpectrogramPipeline
+
+    g = deployed.graph
+    pipe_cls = DVSEventPipeline if g.input_ch == 2 else KWSSpectrogramPipeline
+    pipe = pipe_cls(streams, steps=frames, hw=g.input_hw[0],
+                    n_classes=g.n_classes, seed=seed, duty_cycle=duty)
+    clips = np.asarray(pipe.next_batch()[0])
+    gate = ActivityGate()
+
+    pool = deployed.serve(pool_size, backend=backend)
+    pool.admit("__warm__")
+    pool.step({"__warm__": np.zeros((*g.input_hw, g.input_ch), np.float32)})
+    pool.evict("__warm__")
+    batcher = ContinuousBatcher(pool, gate=gate)
+    for i in range(streams):
+        batcher.submit(StreamRequest(stream_id=f"s{i}", frames=clips[i],
+                                     arrival=i))
+    t0 = time.perf_counter()
+    results = batcher.run()
+    jax.block_until_ready(pool.state.buf)
+    wall = time.perf_counter() - t0
+    stats = batcher.stats()
+
+    # the differential contract, every stream: processed set == the gate
+    # plan, logits == a lone session fed exactly those frames
+    exact = len(results) == streams
+    for r in results:
+        clip = clips[int(r.stream_id[1:])]
+        plan = gate.plan([ActivityGate.activity(f) for f in clip])
+        proc = [t for t, p in enumerate(plan) if p]
+        if r.frames_processed != len(proc):
+            exact = False
+            continue
+        if not proc:
+            exact = exact and r.logits is None
+            continue
+        session = deployed.stream(batch=1, backend=backend)
+        for t in proc:
+            ref = session.step(clip[t][None])
+        exact = exact and r.logits is not None and bool(
+            (np.asarray(ref)[0] == r.logits).all()
+        )
+
+    sg = stats["gating"]
+    energy = energy_summary(
+        deployed,
+        frames_processed=sg["frames_processed"],
+        frames_total=sg["frames_processed"] + sg["frames_skipped"],
+        completed=sum(1 for r in results if r.logits is not None),
+    )
+    return {
+        "pool_size": pool_size,
+        "backend": backend,
+        "streams": streams,
+        "frames_per_stream": frames,
+        "trace_duty_cycle": duty,
+        "gate": {"wake_threshold": gate.wake_threshold,
+                 "park_threshold": gate.park_threshold,
+                 "park_after": gate.park_after},
+        "wall_s": wall,
+        "parks": sg["parks"],
+        "wakes": sg["wakes"],
+        "trace_count": pool.trace_count,
+        "exact_vs_gate_plan": exact,
+        **energy,
+    }
+
+
 def run(args) -> int:
     net = args.net or (SMOKE_NET if args.smoke else FULL_NET)
     pools = args.pools or ([2, 4] if args.smoke else [2, 4, 8])
@@ -275,8 +357,33 @@ def run(args) -> int:
             f"zero_retrace={fleet['zero_retrace']}"
         )
 
+    gated = None
+    if not args.no_gate:
+        gated = bench_gated(
+            deployed, backend=backends[0], pool_size=max(pools),
+            streams=2 * max(pools), frames=frames, duty=args.duty_cycle,
+        )
+        if not gated["exact_vs_gate_plan"]:
+            failures.append("gated: pooled logits != gate-plan lone session")
+        if gated["trace_count"] != 1:
+            failures.append(
+                f"gated: step retraced {gated['trace_count']}x")
+        if gated["frames_skipped"] > 0 and not gated["energy_uj_saved"] > 0:
+            failures.append(
+                f"gated: skipped {gated['frames_skipped']} frames but saved "
+                f"{gated['energy_uj_saved']:.3f} uJ")
+        print(
+            f"[serving-bench] {'gated':>18s} pool{gated['pool_size']} "
+            f"{gated['backend']:>6s}: duty {gated['duty_cycle']:.2f}, "
+            f"{gated['frames_skipped']}/{gated['frames_total']} frames "
+            f"skipped, {gated['energy_uj_saved']:.2f} uJ saved, "
+            f"{gated['energy_uj_per_classification']:.3f} uJ/cls "
+            f"(ungated {gated['energy_uj_per_classification_ungated']:.3f}), "
+            f"exact={gated['exact_vs_gate_plan']}"
+        )
+
     payload = {
-        "schema": 2,
+        "schema": 3,
         "meta": {
             "smoke": bool(args.smoke),
             "net": net,
@@ -292,11 +399,16 @@ def run(args) -> int:
                 "are the serving correctness contract.  latency_ms_p50/p99 "
                 "are per-tick wall percentiles with compile excluded "
                 "(warmup tick / warmup round); the fleet cell measures "
-                "round 2 through pre-warmed bucket pools."
+                "round 2 through pre-warmed bucket pools.  Schema 3 adds "
+                "the activity-gated cell: exact_vs_gate_plan is the "
+                "differential gated-vs-ungated contract and the energy_* "
+                "fields price skipped frames via repro.serving "
+                "energy_summary (sim counters, deterministic)."
             ),
         },
         "results": results,
         "fleet": fleet,
+        "gated": gated,
     }
     default_name = "BENCH_serving.smoke.json" if args.smoke else "BENCH_serving.json"
     out = Path(args.out) if args.out else REPO_ROOT / default_name
@@ -324,6 +436,10 @@ def main(argv=None) -> int:
                          "(default: 3 distinct temporal registry nets)")
     ap.add_argument("--no-fleet", action="store_true",
                     help="skip the fleet cell (single-pool sweep only)")
+    ap.add_argument("--no-gate", action="store_true",
+                    help="skip the activity-gated cell")
+    ap.add_argument("--duty-cycle", type=float, default=0.4,
+                    help="active-frame fraction of the gated cell's traces")
     ap.add_argument("--out", default=None,
                     help="output JSON path (default: <repo>/BENCH_serving.json)")
     return run(ap.parse_args(argv))

@@ -282,6 +282,39 @@ def check_serving(baseline: dict, fresh: dict, latency_tolerance: float,
         if not fleet.get("zero_retrace", False):
             failures.append("fleet: a bucket pool retraced — bucket-ladder "
                             "zero-retrace contract broken")
+    # schema-3 activity-gated cell: absent in schema-2 baselines (and under
+    # --no-gate), so everything here keys off the FRESH payload via .get()
+    gated = fresh.get("gated")
+    if gated:
+        if not gated.get("exact_vs_gate_plan", False):
+            failures.append(
+                "gated: pooled logits NOT bit-exact vs the ActivityGate.plan "
+                "replay — gating correctness failure, tolerance does not apply"
+            )
+        if gated.get("trace_count") != 1:
+            failures.append(
+                f"gated: step traced {gated.get('trace_count')}x "
+                "(parking/waking must reuse the jitted step)"
+            )
+        skipped = gated.get("frames_skipped", 0)
+        saved = gated.get("energy_uj_saved", 0.0)
+        epc = gated.get("energy_uj_per_classification", float("nan"))
+        epc_un = gated.get("energy_uj_per_classification_ungated", float("nan"))
+        if skipped > 0 and not saved > 0.0:
+            failures.append(
+                f"gated: {skipped} frames skipped but energy_uj_saved = "
+                f"{saved:.3f} (gating must price skipped frames as savings)"
+            )
+        if (skipped > 0 and epc == epc and epc_un == epc_un
+                and not epc < epc_un):
+            failures.append(
+                f"gated: energy/classification {epc:.3f} uJ not below the "
+                f"ungated baseline {epc_un:.3f} uJ"
+            )
+        print(f"[serving-gate] gated: {skipped}/{gated.get('frames_total')} "
+              f"frames skipped, {saved:.3f} uJ saved, "
+              f"{epc:.3f} uJ/cls vs {epc_un:.3f} ungated, "
+              f"exact={gated.get('exact_vs_gate_plan')}")
     # 2) p50/p99 latency ratio + occupancy drift vs baseline (shared cells)
     shared = sorted(set(base_cells) & set(fresh_cells))
     for key in shared:

@@ -111,7 +111,24 @@ def summarize_serving(payload: dict) -> str:
         f"{_fmt(bool(fleet['exact_vs_single_session']))}, zero-retrace="
         f"{_fmt(bool(fleet['zero_retrace']))}"
     )
-    return f"{table}\n\n{verdict}\n\n{ftable}"
+    out = f"{table}\n\n{verdict}\n\n{ftable}"
+    gated = payload.get("gated")  # schema 3; absent in schema-2 payloads
+    if gated:
+        grow = [(
+            f"pool{gated['pool_size']}/{gated['backend']}",
+            _fmt(gated.get("trace_duty_cycle", float("nan"))),
+            f"{gated.get('frames_skipped', 0)}/{gated.get('frames_total', 0)}",
+            _fmt(gated.get("energy_uj_saved", float("nan"))),
+            _fmt(gated.get("energy_uj_per_classification", float("nan")), 3),
+            _fmt(gated.get("energy_uj_per_classification_ungated",
+                           float("nan")), 3),
+            _fmt(bool(gated.get("exact_vs_gate_plan", False))),
+        )]
+        gtable = _md_table(
+            ("gated cell", "duty", "skipped", "uJ saved", "uJ/cls",
+             "uJ/cls ungated", "exact"), grow)
+        out = f"{out}\n\n{gtable}"
+    return out
 
 
 SUMMARIZERS = {

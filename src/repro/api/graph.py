@@ -3,7 +3,10 @@
 A `CutieGraph` is a flat, ordered tuple of `LayerSpec`s over the layer kinds
 the CUTIE datapath executes:
 
-  * ``conv2d``      — SAME 3x3 ternary convolution (the OCU array's native op)
+  * ``conv2d``      — SAME ternary convolution (the OCU array's native op;
+                      3x3 by default, 1x1 for pointwise layers, and an
+                      optional output ``stride`` realized as a post-ternarize
+                      subsample so every backend shares one conv kernel)
   * ``pool``        — 2x2 max pool (the silicon's inter-layer pooling unit)
   * ``global_pool`` — spatial global average (DVS frontend -> feature vector)
   * ``flatten``     — [B,H,W,C] -> [B,H*W*C] (CIFAR head)
@@ -44,15 +47,24 @@ class LayerSpec:
     taps: int = 3        # tcn: 1-D kernel taps (must fit kernel height)
     dilation: int = 1    # tcn: dilation D
     window: int = 2      # pool: window/stride
+    stride: int = 1      # conv2d: output stride (post-ternarize subsample)
 
     @property
     def has_weights(self) -> bool:
         return self.kind in _WEIGHT_KINDS
 
 
-def conv2d(c_in: int, c_out: int, kernel: Tuple[int, int] = (3, 3)) -> LayerSpec:
-    """SAME ternary 2-D convolution — the OCU array's native op."""
-    return LayerSpec(kind="conv2d", c_in=c_in, c_out=c_out, kernel=kernel)
+def conv2d(
+    c_in: int, c_out: int, kernel: Tuple[int, int] = (3, 3), stride: int = 1
+) -> LayerSpec:
+    """SAME ternary 2-D convolution — the OCU array's native op.  ``kernel``
+    may be ``(1, 1)`` for a pointwise layer.  ``stride > 1`` subsamples the
+    ternarized output (top-left phase) — because ternarization is
+    elementwise, subsampling after it is bit-identical to a strided conv,
+    so all backends reuse the one SAME-conv kernel.  A strided conv never
+    absorbs a following pool (`CutieGraph.conv_pool_plan`)."""
+    return LayerSpec(kind="conv2d", c_in=c_in, c_out=c_out, kernel=kernel,
+                     stride=stride)
 
 
 def pool(window: int = 2) -> LayerSpec:
@@ -154,7 +166,8 @@ class CutieGraph:
             if l.kind != "conv2d":
                 continue
             nxt = sp[i + 1] if i + 1 < len(sp) else None
-            plan.append(nxt.window if nxt is not None and nxt.kind == "pool" else 0)
+            fuse = (nxt is not None and nxt.kind == "pool" and l.stride == 1)
+            plan.append(nxt.window if fuse else 0)
         return tuple(plan)
 
     @property
@@ -183,6 +196,13 @@ class CutieGraph:
             if l.kind == "conv2d":
                 if l.c_in != c:
                     raise ValueError(f"{where}: c_in {l.c_in} != incoming {c}")
+                if l.stride < 1:
+                    raise ValueError(f"{where}: stride {l.stride} < 1")
+                if l.stride > 1 and (h % l.stride or w % l.stride):
+                    raise ValueError(
+                        f"{where}: {h}x{w} not divisible by stride {l.stride}"
+                    )
+                h, w = h // l.stride, w // l.stride
                 c = l.c_out
             elif l.kind == "pool":
                 if h % l.window or w % l.window:

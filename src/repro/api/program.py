@@ -279,6 +279,11 @@ class CutieProgram:
                 x = ste_ternary_acts(
                     y / (sd + _BN_EPS), self._qat_threshold(params, "conv", ci)
                 )
+                if l.stride > 1:
+                    # stride = post-ternarize subsample (top-left phase);
+                    # ternarization is elementwise, so this is bit-identical
+                    # to a strided conv and every backend shares one kernel
+                    x = x[:, :: l.stride, :: l.stride, :]
                 ci += 1
             elif l.kind == "pool":
                 x = _pool(x, l.window)
@@ -520,6 +525,11 @@ class DeployedProgram:
                     y = _dispatch_conv(x, entry["packed"], eff, backend,
                                        block_cout=bc)
                     x = _ternarize(y, entry.get("threshold", g.act_threshold))
+                if l.stride > 1:
+                    # post-ternarize subsample == strided conv (elementwise
+                    # epilogue); a strided conv never absorbs a pool, so the
+                    # fused int8 output subsamples the same way
+                    x = x[:, :: l.stride, :: l.stride, :]
             elif l.kind == "pool":
                 if fused_pools:
                     fused_pools -= 1

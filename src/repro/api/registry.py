@@ -13,6 +13,12 @@ Plus ``cifar10_tnn_wide`` — a 192-channel, 5x5-stem variant whose schedule
 (C_in/OCU tiling, multi-pass windows) only the `repro.sim` execution plan
 can express; the analytic formula misprices it (see docs/simulator.md).
 
+And ``kws_tcn`` — a keyword-spotting TCN in the style of [10]: a strided
+3x3 stem and 1x1 pointwise convs over single-channel spectrogram frames
+into a dilated-TCN head.  It exists to exercise the stride/1x1 layer
+kinds end to end (lower -> bitsim -> fused -> ``.cutie`` artifact) and is
+the always-on workload the activity gate duty-cycles in serving.
+
 Legacy aliases ``cutie_cifar10`` / ``cutie_dvs`` map to the same graphs.
 """
 from __future__ import annotations
@@ -188,9 +194,51 @@ def cifar10_tnn_wide_graph(
     )
 
 
+def kws_tcn_graph(
+    channels: int = 64,
+    head_channels: int = 96,
+    n_classes: int = 12,
+    input_hw: Tuple[int, int] = (32, 32),
+    tcn_steps: int = 16,
+    name: str = "kws_tcn",
+) -> CutieGraph:
+    """Keyword-spotting TCN (the TCN-on-MFCC family of [10]): strided 3x3
+    stem halving a 1-channel spectrogram patch, 1x1 pointwise mixers
+    between stages, global pool into a 3-layer dilated TCN, 12-keyword
+    last-step head.  One classification = ``passes_per_inference``
+    spectrogram frames pushed through the TCN memory.
+
+    This net is the registry's stride/1x1 coverage: both strided convs
+    subsample post-ternarize (never pool-fused), both pointwise layers run
+    the same kernels at kh = kw = 1 — all analytically schedulable, so it
+    joins the reconcile and stall-free gates alongside the paper nets.
+    ``input_hw`` must be divisible by 4 (two stride-2 stages)."""
+    c, ch = channels, head_channels
+    layers = (
+        conv2d(1, c, stride=2),
+        conv2d(c, c, kernel=(1, 1)),
+        conv2d(c, ch, stride=2),
+        conv2d(ch, ch, kernel=(1, 1)),
+        global_pool(),
+        tcn(ch, ch, dilation=1), tcn(ch, ch, dilation=2),
+        tcn(ch, ch, dilation=4),
+        last_step(), fc(ch, n_classes),
+    )
+    return CutieGraph(
+        name=name,
+        layers=layers,
+        input_hw=input_hw,
+        input_ch=1,
+        n_classes=n_classes,
+        tcn_steps=tcn_steps,
+        passes_per_inference=4,
+    )
+
+
 register_net("cifar10_tnn", cifar10_tnn_graph)
 register_net("dvs_cnn_tcn", dvs_cnn_tcn_graph)
 register_net("cifar10_tnn_wide", cifar10_tnn_wide_graph)
+register_net("kws_tcn", kws_tcn_graph)
 # legacy config names from configs/cutie_nets.py
 register_net("cutie_cifar10", cifar10_tnn_graph)
 register_net("cutie_dvs", dvs_cnn_tcn_graph)
@@ -209,6 +257,13 @@ register_net(
     "cifar10_tnn_wide_smoke",
     lambda: cifar10_tnn_wide_graph(
         channels=8, input_hw=(16, 16), name="cifar10_tnn_wide_smoke"
+    ),
+)
+register_net(
+    "kws_tcn_smoke",
+    lambda: kws_tcn_graph(
+        channels=8, head_channels=12, input_hw=(16, 16), tcn_steps=6,
+        name="kws_tcn_smoke",
     ),
 )
 # two more CI-sized temporal variants so the fleet lanes (fleet-smoke,

@@ -11,7 +11,7 @@ On-disk layout (all integers little-endian; spec in docs/artifact.md):
 
     offset  size  field
     0       8     magic            b"CUTIEPRG"
-    8       2     version (u16)    container format version, currently 1
+    8       2     version (u16)    container format version, currently 2
     10      2     flags (u16)      reserved, 0
     12      4     payload_len (u32)
     16      4     crc32 (u32)      zlib CRC-32 over the payload bytes
@@ -35,6 +35,9 @@ Versioning policy: the header version bumps on ANY payload layout change;
 readers reject versions they do not understand (`UnsupportedVersionError`)
 instead of guessing.  Additive metadata goes into META/image-header JSON
 keys (old readers must ignore unknown keys); structural changes bump.
+Version history: v1 original; v2 adds the per-layer ``stride`` key to the
+PLAN section (strided convs) — v2 readers still accept v1 payloads
+(missing ``stride`` deserializes to 1), so `MIN_VERSION` stays 1.
 """
 from __future__ import annotations
 
@@ -47,7 +50,8 @@ from typing import List, Optional, Tuple
 import numpy as np
 
 MAGIC = b"CUTIEPRG"
-VERSION = 1
+VERSION = 2      # written; bumped when the payload layout changes
+MIN_VERSION = 1  # oldest payload this reader still understands
 HEADER = struct.Struct("<8sHHII")  # magic, version, flags, payload_len, crc32
 _U32 = struct.Struct("<I")
 SECTION_META = b"META"
@@ -265,9 +269,10 @@ def split_container(data: bytes) -> Tuple[int, int, List[Tuple[bytes, bytes]]]:
     magic, version, flags, payload_len, crc = HEADER.unpack_from(data, 0)
     if magic != MAGIC:
         raise BadMagicError(f"bad magic {magic!r}; expected {MAGIC!r}")
-    if version != VERSION:
+    if not MIN_VERSION <= version <= VERSION:
         raise UnsupportedVersionError(
-            f"container version {version}; this reader understands {VERSION}"
+            f"container version {version}; this reader understands "
+            f"{MIN_VERSION}..{VERSION}"
         )
     payload = data[HEADER.size : HEADER.size + payload_len]
     if len(payload) < payload_len:

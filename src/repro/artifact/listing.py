@@ -8,7 +8,7 @@ decimal floats, so the round trip never re-quantizes anything.
 
 Listing grammar (full-line ``;`` comments and blank lines are ignored):
 
-    version 1
+    version 2
     flags 0
     section META
       json {...canonical JSON...}

@@ -11,6 +11,16 @@ Pipelines:
   * DVSEventPipeline   — sparse event frames [T, H, W, 2] with a moving
                          blob per class (gesture-like; ~5% event sparsity,
                          matching the DVS128 regime the paper targets)
+  * KWSSpectrogramPipeline — single-channel ternary spectrogram clips
+                         [T, H, W, 1] with a class-specific spectral
+                         pattern (keyword-spotting-like, for ``kws_tcn``)
+
+The temporal pipelines take a ``duty_cycle``: the fraction of frames
+carrying events/speech; the rest are all-zero "sensor idle" frames.  This
+is the knob the activity-gated serving path (`repro.serving.gating`) is
+benchmarked against — a quiet frame has zero nonzero bins, so it sits
+below any gate threshold.  ``duty_cycle=1.0`` (default) reproduces the
+historical frame streams bit-for-bit.
 """
 from __future__ import annotations
 
@@ -111,11 +121,19 @@ class DVSEventPipeline:
     Each class is a blob moving along a class-specific direction; polarity
     channels encode on/off events — the unstructured-sparsity regime (~2-6%
     events/frame) the paper's DVS128 workload exhibits.
+
+    ``duty_cycle`` < 1 leaves the complementary fraction of frames all-zero
+    (sensor sees nothing): the bursty stream the activity gate parks on.
+    The active/quiet mask is drawn only when duty_cycle < 1, so the default
+    stream is bit-identical to the pre-knob pipeline.
     """
 
     def __init__(self, batch: int, *, steps: int = 5, hw: int = 64,
-                 n_classes: int = 12, seed: int = 0):
+                 n_classes: int = 12, seed: int = 0, duty_cycle: float = 1.0):
+        if not 0.0 <= duty_cycle <= 1.0:
+            raise ValueError(f"duty_cycle {duty_cycle} outside [0, 1]")
         self.batch, self.steps, self.hw, self.n_classes = batch, steps, hw, n_classes
+        self.duty_cycle = duty_cycle
         self.state = PipelineState(seed=seed, step=0)
 
     def batch_at(self, step: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -126,9 +144,13 @@ class DVSEventPipeline:
         ang = 2 * np.pi * labels / self.n_classes
         cx = hw // 2 + (rng.integers(-8, 8, size=b))
         cy = hw // 2 + (rng.integers(-8, 8, size=b))
+        active = (np.ones((b, t), bool) if self.duty_cycle >= 1.0
+                  else rng.random((b, t)) < self.duty_cycle)
         yy, xx = np.mgrid[0:hw, 0:hw]
         for i in range(b):
             for ti in range(t):
+                if not active[i, ti]:
+                    continue  # quiet frame: zero events, gate-parkable
                 px = cx[i] + np.cos(ang[i]) * ti * 4
                 py = cy[i] + np.sin(ang[i]) * ti * 4
                 d2 = (xx - px) ** 2 + (yy - py) ** 2
@@ -146,26 +168,81 @@ class DVSEventPipeline:
         return b
 
 
-def pipeline_for_net(graph, batch: int, *, seed: int = 0, noise: float = 0.5):
+class KWSSpectrogramPipeline:
+    """Keyword-spotting-like spectrogram clips: [B, T, H, W, 1] ternary
+    "mel patch" frames for the single-channel ``kws_tcn`` nets.
+
+    Each class has a fixed sparse spectral prototype; a clip's frames roll
+    it along the frequency axis over time (a crude formant sweep) with
+    per-frame event noise.  ``duty_cycle`` < 1 leaves the complementary
+    frames silent (all-zero) — the always-on-microphone stream the
+    activity gate duty-cycles.
+    """
+
+    def __init__(self, batch: int, *, steps: int = 4, hw: int = 32,
+                 n_classes: int = 12, seed: int = 0, duty_cycle: float = 1.0):
+        if not 0.0 <= duty_cycle <= 1.0:
+            raise ValueError(f"duty_cycle {duty_cycle} outside [0, 1]")
+        self.batch, self.steps, self.hw, self.n_classes = batch, steps, hw, n_classes
+        self.duty_cycle = duty_cycle
+        self.state = PipelineState(seed=seed, step=0)
+        rng = np.random.default_rng(seed)
+        keep = rng.random((n_classes, hw, hw, 1)) < 0.15
+        self.protos = (np.sign(rng.standard_normal((n_classes, hw, hw, 1)))
+                       * keep).astype(np.float32)
+
+    def batch_at(self, step: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        rng = np.random.default_rng((self.state.seed << 20) ^ (step + 13))
+        b, t, hw = self.batch, self.steps, self.hw
+        labels = rng.integers(0, self.n_classes, size=b)
+        frames = np.zeros((b, t, hw, hw, 1), np.float32)
+        active = rng.random((b, t)) < self.duty_cycle
+        for i in range(b):
+            for ti in range(t):
+                if not active[i, ti]:
+                    continue  # silence: zero bins, below any gate threshold
+                x = np.roll(self.protos[labels[i]], ti, axis=0)
+                flip = rng.random((hw, hw, 1)) < 0.02
+                x = np.where(flip, np.sign(rng.standard_normal((hw, hw, 1))), x)
+                frames[i, ti] = x
+        return jnp.asarray(frames), jnp.asarray(labels.astype(np.int32))
+
+    def next_batch(self):
+        b = self.batch_at(self.state.step)
+        self.state.step += 1
+        return b
+
+
+def pipeline_for_net(graph, batch: int, *, seed: int = 0, noise: float = 0.5,
+                     duty_cycle: float = 1.0):
     """The data source matching a `repro.api.CutieGraph`: event clips for
-    temporal (CNN+TCN) graphs, ternarized images for spatial ones — sized to
-    the graph's input geometry and class count.  This is what makes
-    ``repro.train.train(net)`` / ``python -m repro.launch.train --net X``
-    work for ANY registry net without per-net data wiring.
+    temporal (CNN+TCN) graphs — 2-channel graphs get DVS event streams,
+    1-channel graphs get KWS spectrogram clips — and ternarized images for
+    spatial ones, sized to the graph's input geometry and class count.
+    This is what makes ``repro.train.train(net)`` / ``python -m
+    repro.launch.train --net X`` work for ANY registry net without per-net
+    data wiring.
 
     Clip length for temporal graphs is ``passes_per_inference`` (the frames
     the silicon feeds into the TCN ring per classification); ``noise`` is
-    the image-pipeline noise scale (lower = easier synthetic task).
+    the image-pipeline noise scale (lower = easier synthetic task);
+    ``duty_cycle`` is the temporal pipelines' active-frame fraction (< 1
+    leaves frames all-zero for the activity gate to park on).
     """
     if graph.is_temporal:
-        if graph.input_ch != 2:
-            raise ValueError(
-                f"{graph.name}: DVSEventPipeline emits 2 polarity channels, "
-                f"graph wants {graph.input_ch}"
+        if graph.input_ch == 2:
+            return DVSEventPipeline(
+                batch, steps=graph.passes_per_inference, hw=graph.input_hw[0],
+                n_classes=graph.n_classes, seed=seed, duty_cycle=duty_cycle,
             )
-        return DVSEventPipeline(
-            batch, steps=graph.passes_per_inference, hw=graph.input_hw[0],
-            n_classes=graph.n_classes, seed=seed,
+        if graph.input_ch == 1:
+            return KWSSpectrogramPipeline(
+                batch, steps=graph.passes_per_inference, hw=graph.input_hw[0],
+                n_classes=graph.n_classes, seed=seed, duty_cycle=duty_cycle,
+            )
+        raise ValueError(
+            f"{graph.name}: temporal pipelines emit 2 (DVS) or 1 (KWS) "
+            f"channels, graph wants {graph.input_ch}"
         )
     return CifarLikePipeline(
         batch, seed=seed, n_classes=graph.n_classes, hw=graph.input_hw[0],

@@ -34,6 +34,7 @@ Two serving paths:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import sys
 import time
 
@@ -207,18 +208,40 @@ def serve_fleet_scenario(args) -> int:
     (the zero-retrace bucket-ladder contract).  ``--out`` writes the full
     fleet stats report (per-net p50/p99 per pool size, scale events,
     trace audit) as JSON for artifact upload.
+
+    ``--gate`` runs the fleet activity-gated (`repro.serving.gating`) on a
+    bursty ``--duty-cycle`` trace — the CI ``gate-smoke`` gate: each gated
+    stream must reproduce a lone session fed exactly the frames
+    `ActivityGate.plan` selects (bit-exact), the processed/skipped split
+    must match the plan, and the fleet must show a strictly positive
+    energy saving whenever the trace leaves frames quiet.
     """
     import json
 
     from repro.api import get_net
-    from repro.data.pipeline import DVSEventPipeline
-    from repro.serving import FleetRouter, StreamRequest
+    from repro.data.pipeline import DVSEventPipeline, KWSSpectrogramPipeline
+    from repro.serving import (
+        ActivityGate,
+        FleetRouter,
+        StreamRequest,
+        energy_summary,
+    )
 
     net_names = [n.strip() for n in args.fleet_nets.split(",") if n.strip()]
     if len(net_names) < 2:
         print(f"[serve-fleet] need >= 2 nets, got {net_names}", file=sys.stderr)
         return 2
     n_streams = args.streams or 4
+    gate = None
+    if args.gate:
+        gate = ActivityGate(
+            wake_threshold=args.wake_threshold,
+            park_threshold=args.park_threshold,
+            park_after=args.park_after,
+        )
+    duty = args.duty_cycle if args.duty_cycle is not None else (
+        0.4 if args.gate else 1.0
+    )
     router = FleetRouter(
         backend=args.backend,
         max_pool_size=args.pool,
@@ -226,6 +249,7 @@ def serve_fleet_scenario(args) -> int:
         shrink_after=args.shrink_after,
         ingest=args.ingest,
         sharding="auto" if args.shard else None,
+        gate=gate,
     )
     deps, clips = {}, {}
     for idx, name in enumerate(net_names):
@@ -235,9 +259,10 @@ def serve_fleet_scenario(args) -> int:
             print(f"[serve-fleet] {name} is not temporal; pick TCN nets",
                   file=sys.stderr)
             return 2
-        pipe = DVSEventPipeline(
+        pipe_cls = DVSEventPipeline if g.input_ch == 2 else KWSSpectrogramPipeline
+        pipe = pipe_cls(
             n_streams, steps=args.frames, hw=g.input_hw[0],
-            n_classes=g.n_classes, seed=args.seed + idx,
+            n_classes=g.n_classes, seed=args.seed + idx, duty_cycle=duty,
         )
         frames, labels = pipe.next_batch()
         deps[name] = prog.quantize(
@@ -259,9 +284,10 @@ def serve_fleet_scenario(args) -> int:
     agg = stats["aggregate"]
 
     threaded = any(s["ingest_threaded"] for s in stats["nets"].values())
+    gating = (f", gated duty~{duty:.2f}" if gate is not None else "")
     print(f"[serve-fleet] {len(net_names)} nets x {n_streams} sensors x "
           f"{args.frames} frames ({args.backend}, ladder cap {args.pool}, "
-          f"ingest={'thread' if threaded else 'sync'})")
+          f"ingest={'thread' if threaded else 'sync'}{gating})")
     print(f"[serve-fleet] {agg['frames_processed']} frames, "
           f"{agg['completed']} streams in {agg['ticks']} ticks, {wall:.2f} s; "
           f"fleet p50 {agg['latency_ms_p50']:.1f} ms / "
@@ -282,19 +308,41 @@ def serve_fleet_scenario(args) -> int:
         if not any(tc == 1 for tc in s["pools_traced"].values()):
             failures.append(f"{name}: no pool ever traced (bucket never stepped)")
 
-    # per-stream bit-exactness vs lone StreamSessions
-    finite = all(np.isfinite(r.logits).all() for r in results)
+    # per-stream bit-exactness vs lone StreamSessions.  Gated: the lone
+    # session is fed exactly the frames ActivityGate.plan selects — the
+    # differential contract gated serving must honour.
+    finite = all(
+        np.isfinite(r.logits).all() for r in results if r.logits is not None
+    )
     checked = mismatched = 0
     for r in results:
-        session = deps[r.net].stream(batch=1, backend=args.backend)
         clip = clips[r.stream_id]
-        for t in range(clip.shape[0]):
-            ref = session.step(clip[t][None])
+        if gate is None:
+            processed = list(range(clip.shape[0]))
+        else:
+            plan = gate.plan([ActivityGate.activity(f) for f in clip])
+            processed = [t for t, p in enumerate(plan) if p]
+            if r.frames_processed != len(processed):
+                mismatched += 1
+                failures.append(
+                    f"{r.stream_id}: processed {r.frames_processed} frames, "
+                    f"gate plan says {len(processed)}")
+                continue
         checked += 1
-        if not (np.asarray(ref)[0] == r.logits).all():
+        if not processed:
+            if r.logits is not None:
+                mismatched += 1
+                failures.append(
+                    f"{r.stream_id}: all-quiet stream has logits")
+            continue
+        session = deps[r.net].stream(batch=1, backend=args.backend)
+        for t in processed:
+            ref = session.step(clip[t][None])
+        if r.logits is None or not (np.asarray(ref)[0] == r.logits).all():
             mismatched += 1
             failures.append(f"{r.stream_id}: pooled logits != lone session")
-    print(f"[serve-fleet] bit-exactness: {checked} streams replayed, "
+    print(f"[serve-fleet] bit-exactness: {checked} streams replayed"
+          f"{' (gated frame plan)' if gate is not None else ''}, "
           f"{mismatched} mismatches; logits finite: {finite}")
     if not finite:
         failures.append("non-finite logits")
@@ -302,12 +350,36 @@ def serve_fleet_scenario(args) -> int:
         failures.append(
             f"{len(results)}/{len(net_names) * n_streams} streams completed")
 
+    energy = {}
+    if gate is not None:
+        for name in net_names:
+            sg = stats["nets"][name]["gating"]
+            nres = [r for r in results if r.net == name]
+            energy[name] = energy_summary(
+                deps[name],
+                frames_processed=sg["frames_processed"],
+                frames_total=sg["frames_processed"] + sg["frames_skipped"],
+                completed=sum(1 for r in nres if r.logits is not None),
+            )
+            e = energy[name]
+            print(f"[serve-fleet]   {name}: {e['frames_skipped']} of "
+                  f"{e['frames_total']} frames skipped -> "
+                  f"{e['energy_uj_saved']:.2f} uJ saved, "
+                  f"{e['energy_uj_per_classification']:.2f} uJ/classification "
+                  f"(ungated {e['energy_uj_per_classification_ungated']:.2f})")
+            if duty < 1.0 and not e["energy_uj_saved"] > 0.0:
+                failures.append(
+                    f"{name}: non-positive gated energy saving "
+                    f"({e['energy_uj_saved']:.3f} uJ at duty {duty:.2f})")
+
     if args.out:
         report = {"scenario": {
             "nets": net_names, "streams_per_net": n_streams,
             "frames": args.frames, "backend": args.backend,
             "ladder_cap": args.pool, "wall_s": wall,
-        }, "stats": stats, "failures": failures}
+            "gate": dataclasses.asdict(gate) if gate is not None else None,
+            "duty_cycle": duty,
+        }, "stats": stats, "energy": energy or None, "failures": failures}
         with open(args.out, "w") as f:
             json.dump(report, f, indent=2, default=float)
         print(f"[serve-fleet] report -> {args.out}")
@@ -388,6 +460,21 @@ def main(argv=None):
                     help="fleet: host-side frame ingestion — feeder thread "
                          "with double buffers (auto/thread), synchronous "
                          "assembly (sync), or no prefetch at all (off)")
+    ap.add_argument("--gate", action="store_true",
+                    help="fleet: activity-gate the streams (park quiet "
+                         "sensors out of their pool slot, wake on events; "
+                         "adds the gated-vs-ungated bit-exactness and "
+                         "energy-saving gates)")
+    ap.add_argument("--duty-cycle", type=float, default=None,
+                    help="fleet: fraction of frames carrying events in the "
+                         "synthetic traces (default 1.0, or 0.4 with "
+                         "--gate — a bursty trace the gate can park on)")
+    ap.add_argument("--wake-threshold", type=int, default=16,
+                    help="gate: event count that wakes a parked stream")
+    ap.add_argument("--park-threshold", type=int, default=4,
+                    help="gate: event count below which a frame is quiet")
+    ap.add_argument("--park-after", type=int, default=2,
+                    help="gate: consecutive quiet frames before parking")
     ap.add_argument("--out", default=None, metavar="FILE.json",
                     help="fleet: write the full stats report as JSON")
     ap.add_argument("--check-streams", type=int, default=2,

@@ -11,8 +11,14 @@ Entry points: `DeployedProgram.serve(pool_size, backend)` for one net,
 `DeployedProgram.serve_fleet()` / `repro.serving.serve_fleet({...})` for
 many.
 
+`ActivityGate` adds TinyVers-style duty cycling on top: quiet streams
+park out of their pool slot with ring state retained, wake bit-identically
+on an event burst, and `energy_summary` prices the skipped frames in uJ on
+the same sim counters `silicon_report` uses.
+
 Layering: `masking` (pure state algebra) <- `pool` (mechanism) <-
-`scheduler` (single-net policy) <- `fleet` (multi-net policy).
+`gating` (host-side policy) <- `scheduler` (single-net policy) <-
+`fleet` (multi-net policy).
 `repro.api` stays importable without this package; this package imports
 `repro.api.program` only inside `SessionPool` for the backend check.
 """
@@ -34,10 +40,20 @@ from repro.serving.fleet import (
     bucket_ladder,
     serve_fleet,
 )
+from repro.serving.gating import (
+    ActivityGate,
+    GateState,
+    energy_summary,
+    frame_energy_uj,
+)
 from repro.serving.pool import PoolFullError, SessionPool
 from repro.serving.scheduler import ContinuousBatcher, StreamRequest, StreamResult
 
 __all__ = [
+    "ActivityGate",
+    "GateState",
+    "energy_summary",
+    "frame_energy_uj",
     "FleetQueueFull",
     "FleetRouter",
     "FrameFeeder",

@@ -34,6 +34,11 @@ means many tenants running *different* registry nets concurrently — the
     into the bucket's FIFO queue (the batcher's admission queue), bounded
     by ``queue_limit``; overflowing THAT raises `FleetQueueFull` — the
     backpressure signal a fronting ingest tier would shed load on.
+  * **Activity gating.**  Pass an `ActivityGate` (router-wide or per
+    bucket) and every bucket's batcher duty-cycles its streams: quiet
+    streams park out of their pool slot with ring state retained and stop
+    counting toward autoscale demand, waking bit-identically on an event
+    burst (`repro.serving.gating`; CI ``gate-smoke``).
   * **Device sharding.**  ``sharding="auto"`` lays every bucket's pool
     axis across all local devices (per-pool `NamedSharding`, a no-op on
     single-device hosts) — ladder sizes divisible by the device count
@@ -62,6 +67,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.serving.gating import ActivityGate
 from repro.serving.pool import SessionPool
 from repro.serving.scheduler import ContinuousBatcher, StreamRequest, StreamResult
 
@@ -232,6 +238,7 @@ class NetBucket:
         ingest: str = "auto",
         sharding=None,
         jit: bool = True,
+        gate: Optional[ActivityGate] = None,
     ):
         if not getattr(program.graph, "is_temporal", False):
             raise ValueError(
@@ -250,10 +257,11 @@ class NetBucket:
         self.shrink_after = shrink_after
         self.sharding = sharding
         self.jit = jit
+        self.gate = gate
         self.pools: Dict[int, SessionPool] = {}
         self.feeder = FrameFeeder(mode=ingest) if ingest != "off" else None
         self.batcher = ContinuousBatcher(
-            self._pool(self.ladder[0]), feeder=self.feeder
+            self._pool(self.ladder[0]), feeder=self.feeder, gate=gate
         )
         self.scale_events: List[ScaleEvent] = []
         self._calm_ticks = 0
@@ -411,6 +419,7 @@ class FleetRouter:
         ingest: str = "auto",
         sharding=None,
         jit: bool = True,
+        gate: Optional[ActivityGate] = None,
     ):
         self.backend = backend
         self.ladder = tuple(ladder) if ladder else bucket_ladder(max_pool_size)
@@ -419,6 +428,7 @@ class FleetRouter:
         self.ingest = ingest
         self.sharding = sharding
         self.jit = jit
+        self.gate = gate
         self.buckets: Dict[str, NetBucket] = {}
         self.tick_index = 0
 
@@ -431,6 +441,7 @@ class FleetRouter:
         backend: Optional[str] = None,
         ladder: Optional[Sequence[int]] = None,
         queue_limit: Optional[int] = None,
+        gate: Optional[ActivityGate] = None,
     ) -> NetBucket:
         """Add a net to the fleet under routing key ``name``.  ``program``
         is anything the pool serves — a `DeployedProgram` or a loaded
@@ -448,6 +459,7 @@ class FleetRouter:
             ingest=self.ingest,
             sharding=self.sharding,
             jit=self.jit,
+            gate=gate if gate is not None else self.gate,
         )
         self.buckets[name] = bucket
         return bucket
@@ -523,8 +535,16 @@ class FleetRouter:
              for _, s in b.batcher.latency_trace],
             np.float64,
         )
+        gated = [s["gating"] for s in nets.values() if "gating" in s]
         return {
             "nets": nets,
+            "gating": {
+                "frames_processed": sum(g["frames_processed"] for g in gated),
+                "frames_skipped": sum(g["frames_skipped"] for g in gated),
+                "parks": sum(g["parks"] for g in gated),
+                "wakes": sum(g["wakes"] for g in gated),
+                "parked": sum(g["parked"] for g in gated),
+            } if gated else None,
             "aggregate": {
                 "nets": len(self.buckets),
                 "ticks": self.tick_index,

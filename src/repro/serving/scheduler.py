@@ -32,6 +32,17 @@ Fleet hooks (used by `repro.serving.fleet`, inert otherwise):
     is how autoscaling rides the bucket ladder with bit-identical logits.
   * `cancel(stream_id)` — early departure of a queued OR in-flight stream
     (a sensor going offline before its clip ends).
+
+Activity gating (``gate=ActivityGate(...)``): streams start *parked* —
+host-side event counting decides per frame whether a stream deserves a
+pool slot at all.  A parked stream consumes one frame per tick off the
+gate (never the device); on a wake-threshold frame it enters the normal
+admission FIFO and resumes from its retained ring state bit-identically.
+An in-flight stream that goes quiet for ``park_after`` consecutive frames
+is evicted *with* state and its slot refills immediately.  The processed-
+frame set is exactly `ActivityGate.plan` of the stream's activity trace —
+the differential contract tests/test_gating.py pins.  See
+`repro.serving.gating`.
 """
 
 from __future__ import annotations
@@ -39,11 +50,12 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Deque, Dict, List, Optional, Set, Tuple
 
 import jax
 import numpy as np
 
+from repro.serving.gating import ActivityGate, GateState
 from repro.serving.pool import SessionPool
 
 
@@ -73,36 +85,57 @@ class StreamRequest:
 
 @dataclasses.dataclass
 class StreamResult:
-    """Departure record: final-frame logits + lifecycle ticks."""
+    """Departure record: final-frame logits + lifecycle ticks.
+
+    Under activity gating ``logits`` are those of the last *processed*
+    frame (``None`` for a stream whose whole clip stayed below the wake
+    threshold — it never touched the device), ``frames_processed`` /
+    ``frames_skipped`` split the clip, and ``admitted_tick`` is -1 when
+    the stream was never admitted.  Ungated serving leaves the defaults:
+    every frame processed, none skipped."""
 
     stream_id: str
-    logits: np.ndarray  # [n_classes], after the stream's last frame
+    logits: Optional[np.ndarray]  # [n_classes], after the last processed frame
     n_frames: int
     admitted_tick: int
     finished_tick: int
     label: Optional[int] = None
     net: Optional[str] = None
+    frames_processed: int = -1  # -1: ungated, == n_frames
+    frames_skipped: int = 0
+
+    def __post_init__(self):
+        if self.frames_processed < 0:
+            self.frames_processed = self.n_frames
 
     @property
-    def pred(self) -> int:
-        return int(np.argmax(self.logits))
+    def pred(self) -> Optional[int]:
+        return None if self.logits is None else int(np.argmax(self.logits))
 
     @property
     def correct(self) -> Optional[bool]:
-        return None if self.label is None else self.pred == int(self.label)
+        if self.label is None or self.logits is None:
+            return None
+        return self.pred == int(self.label)
 
 
 class ContinuousBatcher:
     """FIFO admission over a `SessionPool`; finished streams free their
     slot for the head of the queue on the next tick."""
 
-    def __init__(self, pool: SessionPool, feeder=None):
+    def __init__(self, pool: SessionPool, feeder=None,
+                 gate: Optional[ActivityGate] = None):
         self.pool = pool
         self.feeder = feeder
+        self.gate = gate
         self._queue: Deque[StreamRequest] = deque()
         self._inflight: Dict[str, StreamRequest] = {}
         self._next_frame: Dict[str, int] = {}
         self._admitted_tick: Dict[str, int] = {}
+        # gated streams currently without a slot (asleep); gate states
+        # persist after departure so stats can total processed/skipped
+        self._parked: Dict[str, StreamRequest] = {}
+        self._gate_state: Dict[str, GateState] = {}
         self.results: List[StreamResult] = []
         self.cancelled: List[str] = []
         self.tick_index = 0
@@ -115,15 +148,23 @@ class ContinuousBatcher:
 
     def submit(self, request: StreamRequest) -> None:
         """Queue one stream for admission (from its ``arrival`` tick on).
-        Stream ids must be unique across the batcher's lifetime."""
+        Stream ids must be unique across the batcher's lifetime.  Gated
+        streams start parked — they enter the admission FIFO only when a
+        frame crosses the wake threshold, so a quiet sensor never consumes
+        a slot."""
         ids = (
             {r.stream_id for r in self._queue}
             | set(self._inflight)
+            | set(self._parked)
             | {r.stream_id for r in self.results}
         )
         if request.stream_id in ids:
             raise ValueError(f"duplicate stream id {request.stream_id!r}")
-        self._queue.append(request)
+        if self.gate is not None:
+            self._gate_state[request.stream_id] = GateState()
+            self._parked[request.stream_id] = request
+        else:
+            self._queue.append(request)
 
     def submit_many(self, requests) -> None:
         """`submit` each request in order (FIFO admission preserved)."""
@@ -144,6 +185,13 @@ class ContinuousBatcher:
                 self._queue.remove(req)
                 self.cancelled.append(stream_id)
                 return "queued"
+        if stream_id in self._parked:
+            # parked = no slot held; drop the retained ring with it
+            del self._parked[stream_id]
+            self._gate_state[stream_id].retained = None
+            self._admitted_tick.pop(stream_id, None)
+            self.cancelled.append(stream_id)
+            return "parked"
         if stream_id in self._inflight:
             self.pool.evict(stream_id)
             del self._inflight[stream_id], self._next_frame[stream_id]
@@ -156,7 +204,7 @@ class ContinuousBatcher:
 
     @property
     def pending(self) -> bool:
-        return bool(self._queue or self._inflight)
+        return bool(self._queue or self._inflight or self._parked)
 
     @property
     def queue_depth(self) -> int:
@@ -212,11 +260,98 @@ class ContinuousBatcher:
             if req.arrival > self.tick_index:
                 waiting.append(req)
                 continue
-            self.pool.admit(req.stream_id)
-            self._inflight[req.stream_id] = req
-            self._next_frame[req.stream_id] = 0
-            self._admitted_tick[req.stream_id] = self.tick_index
+            sid = req.stream_id
+            cursor = 0
+            state = None
+            gs = self._gate_state.get(sid)
+            if gs is not None:
+                # waking: resume from the retained ring (None on the first
+                # wake — a cold admit) at the frame that woke the stream
+                state, gs.retained = gs.retained, None
+                cursor = gs.cursor
+            self.pool.admit(sid, state=state)
+            self._inflight[sid] = req
+            self._next_frame[sid] = cursor
+            # the FIRST admission tick survives park/wake cycles
+            self._admitted_tick.setdefault(sid, self.tick_index)
         self._queue.extendleft(reversed(waiting))
+
+    def _gate_finish(self, sid: str, req: StreamRequest) -> None:
+        """Depart a stream that ran out of frames without a slot: its
+        result carries the last *processed* frame's logits (None when the
+        whole clip stayed quiet — the device never saw this stream)."""
+        gs = self._gate_state[sid]
+        gs.retained = None
+        del self._parked[sid]
+        self.results.append(StreamResult(
+            stream_id=sid,
+            logits=gs.last_logits,
+            n_frames=int(req.frames.shape[0]),
+            admitted_tick=self._admitted_tick.pop(sid, -1),
+            finished_tick=self.tick_index,
+            label=req.label,
+            net=req.net,
+            frames_processed=gs.processed,
+            frames_skipped=gs.skipped,
+        ))
+
+    def _gate_park_inflight(self) -> Set[str]:
+        """Examine each in-flight stream's NEXT frame; park the ones that
+        just hit ``park_after`` consecutive quiet frames — evicted WITH
+        ring state (retention, not cancellation), slot free for this very
+        tick's refill.  Returns the just-parked ids so the parked scan
+        below does not consume a second frame from them this tick."""
+        parked_now: Set[str] = set()
+        if self.gate is None:
+            return parked_now
+        for sid in list(self._inflight):
+            req = self._inflight[sid]
+            gs = self._gate_state[sid]
+            if self.gate.active(req.frames[self._next_frame[sid]]):
+                gs.quiet_run = 0
+                continue
+            gs.quiet_run += 1
+            if gs.quiet_run < self.gate.park_after:
+                continue  # hysteresis window: borderline frames still step
+            gs.retained = self.pool.evict(sid)
+            gs.awake = False
+            gs.parks += 1
+            gs.cursor = self._next_frame[sid] + 1  # the park frame is skipped
+            gs.skipped += 1
+            self._parked[sid] = req
+            del self._inflight[sid], self._next_frame[sid]
+            parked_now.add(sid)
+            if self.feeder is not None:
+                self.feeder.invalidate()
+            if gs.cursor >= req.frames.shape[0]:
+                self._gate_finish(sid, req)
+        return parked_now
+
+    def _gate_scan_parked(self, skip: Set[str]) -> None:
+        """One frame per tick off each parked stream's trace: a
+        wake-threshold frame sends the stream into the admission FIFO
+        *at that frame* (processed once a slot frees — no re-gating while
+        queued); anything quieter is skipped without touching the device."""
+        if self.gate is None:
+            return
+        for sid in list(self._parked):
+            if sid in skip:
+                continue  # parked THIS tick; its frame is already consumed
+            req = self._parked[sid]
+            if req.arrival > self.tick_index:
+                continue
+            gs = self._gate_state[sid]
+            if self.gate.wakes(req.frames[gs.cursor]):
+                gs.awake = True
+                gs.quiet_run = 0
+                gs.wakes += 1
+                del self._parked[sid]
+                self._queue.append(req)
+            else:
+                gs.cursor += 1
+                gs.skipped += 1
+                if gs.cursor >= req.frames.shape[0]:
+                    self._gate_finish(sid, req)
 
     def _assemble(self) -> Tuple[np.ndarray, np.ndarray]:
         """The tick's (batch, active) pair: the feeder's prefetched buffer
@@ -263,6 +398,8 @@ class ContinuousBatcher:
         per-stream logits of every stream that consumed a frame.  A tick
         with nothing in flight (gap before the next arrival) only advances
         logical time."""
+        parked_now = self._gate_park_inflight()
+        self._gate_scan_parked(parked_now)
         self._admit_ready()
         stepping = list(self._inflight)
         self.occupancy_trace.append(len(stepping) / self.pool.pool_size)
@@ -278,6 +415,11 @@ class ContinuousBatcher:
         for sid in stepping:
             self._next_frame[sid] += 1
             req = self._inflight[sid]
+            gs = self._gate_state.get(sid)
+            if gs is not None:
+                gs.cursor = self._next_frame[sid]
+                gs.processed += 1
+                gs.last_logits = np.asarray(out[sid])
             if self._next_frame[sid] >= req.frames.shape[0]:
                 self.pool.evict(sid)
                 self.results.append(
@@ -289,6 +431,8 @@ class ContinuousBatcher:
                         finished_tick=self.tick_index,
                         label=req.label,
                         net=req.net,
+                        frames_processed=gs.processed if gs else -1,
+                        frames_skipped=gs.skipped if gs else 0,
                     )
                 )
                 del self._inflight[sid], self._next_frame[sid]
@@ -340,14 +484,18 @@ class ContinuousBatcher:
         for req in self._queue:
             bump(self._net_of(req), "queued")
         lat = np.array([s for _, s in self.latency_trace], np.float64)
-        return {
+        if self.gate is None:
+            frames = sum(r.n_frames for r in done) + sum(self._next_frame.values())
+        else:
+            # gated: only device-stepped frames count (the energy axis)
+            frames = sum(g.processed for g in self._gate_state.values())
+        out = {
             "ticks": self.tick_index,
             "completed": len(done),
             "cancelled": len(self.cancelled),
             "queue_depth": self.queue_depth,
             "inflight": self.inflight_count,
-            "frames_processed": sum(r.n_frames for r in done)
-            + sum(self._next_frame.values()),
+            "frames_processed": frames,
             "mean_occupancy": float(np.mean(occ)) if occ else 0.0,
             "accuracy": float(np.mean(acc)) if acc else float("nan"),
             "per_net": per_net,
@@ -356,3 +504,13 @@ class ContinuousBatcher:
             "latency_ms_p99": float(np.percentile(lat, 99) * 1e3)
             if lat.size else float("nan"),
         }
+        if self.gate is not None:
+            gss = self._gate_state.values()
+            out["gating"] = {
+                "frames_processed": frames,
+                "frames_skipped": sum(g.skipped for g in gss),
+                "parks": sum(g.parks for g in gss),
+                "wakes": sum(g.wakes for g in gss),
+                "parked": len(self._parked),
+            }
+        return out

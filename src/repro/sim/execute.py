@@ -151,17 +151,23 @@ class PlanExecutor:
         if self.backend == "bitsim":
             y = self._tiled_conv(x, lp, img)
         elif self.backend == "fused":
-            return _dispatch_conv(
+            t = _dispatch_conv(
                 x, jnp.asarray(img.packed), jnp.asarray(img.eff_scale),
                 "fused", threshold=img.threshold, pool=lp.pool,
                 block_cout=self._block_cout(lp),
             )
+            if lp.stride > 1:
+                t = t[:, :: lp.stride, :: lp.stride, :]
+            return t
         else:
             y = _dispatch_conv(
                 x, jnp.asarray(img.packed), jnp.asarray(img.eff_scale),
                 self.backend, block_cout=self._block_cout(lp),
             )
         t = _ternarize(y, img.threshold)
+        if lp.stride > 1:
+            # post-ternarize subsample == strided conv (never pool-fused)
+            t = t[:, :: lp.stride, :: lp.stride, :]
         if lp.pool:
             t = _max_pool(t, lp.pool)
         # the deploy interpreter keeps float trits between layers on the

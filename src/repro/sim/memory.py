@@ -223,6 +223,8 @@ class FeatureMemory:
     bank_bytes: int = KRAKEN_FMAP_BANK_BYTES
 
     def out_hw(self, lp: LayerPlan) -> tuple:
+        if lp.kind == "conv2d" and lp.stride > 1:
+            return lp.h // lp.stride, lp.w // lp.stride
         if lp.pool and lp.kind in ("conv2d", "tcn"):
             return lp.h // lp.pool, lp.w // lp.pool
         return lp.h, lp.w

@@ -62,8 +62,11 @@ class LayerPlan:
     fields meaningful for that kind are set.
 
     Geometry conventions:
-      * conv2d:   ``h`` x ``w`` is the SAME-conv spatial size (pre-pool);
-                  ``pool`` > 0 is the absorbed epilogue max-pool window.
+      * conv2d:   ``h`` x ``w`` is the SAME-conv spatial size (pre-pool,
+                  pre-stride); ``pool`` > 0 is the absorbed epilogue max-pool
+                  window; ``stride`` > 1 subsamples the ternarized output
+                  (the schedule prices only the kept output pixels — a
+                  strided conv never absorbs a pool).
       * tcn:      ``h`` = ceil(tcn_steps / dilation) rows, ``w`` = dilation
                   columns — the §4 wrapped form the 2-D engine runs.
       * fc:       ``c_in`` is the matmul fan-in (flattened features);
@@ -84,12 +87,16 @@ class LayerPlan:
     taps: int = 0
     c_pad: int = 0
     arch_c_in: int = 0
+    stride: int = 1
     tiles: Tuple[TileAssign, ...] = ()
 
     @property
     def out_pixels(self) -> int:
-        """Output pixels the OCU array produces per tile pass (pre-pool)."""
-        return self.h * self.w if self.kind in ("conv2d", "tcn") else 1
+        """Output pixels the OCU array produces per tile pass (pre-pool;
+        strided convs compute only the kept output phase)."""
+        if self.kind == "conv2d":
+            return (self.h // self.stride) * (self.w // self.stride)
+        return self.h * self.w if self.kind == "tcn" else 1
 
     @property
     def cout_tile_widths(self) -> Tuple[int, ...]:
@@ -165,7 +172,8 @@ class ExecutionPlan:
         for lp in self.layers:
             if lp.kind == "conv2d":
                 frontend.append(arch.ConvLayer(
-                    lp.h, lp.w, lp.c_in, lp.c_out, kh=lp.kh, kw=lp.kw
+                    lp.h // lp.stride, lp.w // lp.stride, lp.c_in, lp.c_out,
+                    kh=lp.kh, kw=lp.kw
                 ))
             elif lp.kind == "tcn":
                 head.append(arch.ConvLayer(
@@ -218,15 +226,19 @@ def lower(graph: CutieGraph, hw: Optional[arch.CutieHW] = None) -> ExecutionPlan
         if l.kind == "conv2d":
             nxt = g.layers[i + 1] if i + 1 < len(g.layers) else None
             fused_pool = (
-                nxt.window if is_spatial and nxt is not None and nxt.kind == "pool" else 0
+                nxt.window
+                if is_spatial and nxt is not None and nxt.kind == "pool"
+                and l.stride == 1 else 0
             )
             c_pad = _ceil4(l.c_in)
             layers.append(LayerPlan(
                 index=i, kind="conv2d", h=h, w=w, c_in=l.c_in, c_out=l.c_out,
                 kh=l.kernel[0], kw=l.kernel[1], pool=fused_pool, c_pad=c_pad,
+                stride=l.stride,
                 tiles=_tile_ranges(l.c_out, c_pad, hw.n_ocu, hw.max_cin),
             ))
             c = l.c_out
+            h, w = h // l.stride, w // l.stride
             if fused_pool:
                 absorbed_pool_at = i + 1
                 h, w = h // fused_pool, w // fused_pool

@@ -19,6 +19,7 @@ Execution equivalence (loaded artifact vs the in-memory `DeployedProgram`
 on every backend) lives in tests/test_artifact_loader.py.
 """
 import hashlib
+import json
 import os
 import struct
 import subprocess
@@ -88,6 +89,27 @@ class TestErrors:
         data = smoke_bytes[:8] + struct.pack("<H", VERSION + 1) + smoke_bytes[10:]
         with pytest.raises(UnsupportedVersionError, match="this reader understands"):
             artifact.loads(data)
+
+    def test_v1_payload_still_loads(self, smoke_bytes):
+        """The MIN_VERSION contract: a v1 artifact (pre-stride PLAN
+        schema) loads on the v2 reader with every stride defaulting to 1."""
+        listing = artifact.disassemble(smoke_bytes)
+        lines = []
+        for ln in listing.splitlines():
+            if ln.strip().startswith("version"):
+                lines.append("version 1")
+            elif ln.strip().startswith("json") and '"stride"' in ln:
+                pad, body = ln.split("json ", 1)
+                obj = json.loads(body)
+                for lp in obj.get("layers", ()):
+                    lp.pop("stride", None)
+                lines.append(pad + "json " + canonical_json(obj).decode())
+            else:
+                lines.append(ln)
+        v1 = artifact.reassemble("\n".join(lines))
+        assert v1 != smoke_bytes  # genuinely the old schema
+        loaded = artifact.loads(v1)
+        assert all(lp.stride == 1 for lp in loaded.plan.layers)
 
     def test_crc_mismatch(self, smoke_bytes):
         flipped = smoke_bytes[-1] ^ 0xFF
@@ -169,8 +191,9 @@ class TestRoundTrip:
 # library-version-dependent float anywhere — trits are (arange % 3) - 1 and
 # scales are small-integer/8 (exact in float32).  If this pin moves, the
 # on-disk format changed: bump VERSION and docs/artifact.md.
+# Pin history: v1 7b1673af...390c; v2 (PLAN layers carry "stride"):
 _HAND_BUILT_SHA256 = (
-    "7b1673af1c2547a4fc8557cd6d76a17928b31aab8ab01c55d89fd9a9a770390c"
+    "d0116d48965da975b6acbb5a35608390d8281c876bf459c7ca54b3a46a917199"
 )
 
 

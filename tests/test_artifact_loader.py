@@ -133,6 +133,46 @@ class TestLoaderEquivalence:
         assert pool.trace_count == 1
 
 
+class TestKWSArtifact:
+    """The 1-channel KWS TCN (strided stem + 1x1 mixers, ISSUE 9) through
+    the shipping seams explicitly — on top of the `_registry_names()`
+    parametrizations it already joins above."""
+
+    def test_kws_nets_are_in_the_registry_sweep(self):
+        names = _registry_names()
+        assert "kws_tcn" in names and "kws_tcn_smoke" in names
+
+    def test_cutie_round_trip_and_cross_backend_exactness(self):
+        """build -> disassemble -> reassemble byte-identical -> load ->
+        forward bit-exact vs the deployed program on every backend; the
+        loaded plan keeps the strided/pointwise geometry."""
+        dep = _deploy("kws_tcn_smoke")
+        data = dep.to_artifact_bytes()
+        assert artifact.reassemble(artifact.disassemble(data)) == data
+        loaded = artifact.loads(data)
+        convs = [lp for lp in loaded.plan.layers if lp.kind == "conv2d"]
+        assert [c.stride for c in convs] == [2, 1, 2, 1]
+        assert [(c.kh, c.kw) for c in convs] == \
+            [(3, 3), (1, 1), (3, 3), (1, 1)]
+        x = _inputs(loaded.info, batch=2, frames=3)
+        for be in BACKENDS:
+            _exact(loaded.forward(x, backend=be), dep.forward(x, backend=be),
+                   f"kws/{be}")
+
+    def test_stream_equals_batch_from_artifact(self):
+        """Streamed frame-at-a-time execution of the loaded KWS artifact
+        lands on the batch logits exactly, per backend."""
+        loaded = artifact.loads(_deploy("kws_tcn_smoke").to_artifact_bytes())
+        frames = _inputs(loaded.info, batch=2,
+                         frames=loaded.info.tcn_steps)
+        for be in BACKENDS:
+            batch = loaded.forward(frames, backend=be)
+            session = loaded.stream(batch=2, backend=be)
+            for t in range(frames.shape[1]):
+                logits = session.step(frames[:, t])
+            _exact(logits, batch, f"kws stream/{be}")
+
+
 # ---------------------------------------------------------------------------
 # The golden model on the loaded artifact: stalls + sparsity + calibration
 # ---------------------------------------------------------------------------

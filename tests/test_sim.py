@@ -57,6 +57,17 @@ def _mixed_graph():
     )
 
 
+def _strided_graph():
+    """Strided + pointwise (1x1) convs — the KWS-frontend layer kinds."""
+    return api.CutieGraph(
+        name="strided", input_hw=(8, 8), input_ch=3, n_classes=4,
+        layers=(api.conv2d(3, 8, stride=2),
+                api.conv2d(8, 8, kernel=(1, 1)),
+                api.conv2d(8, 8, stride=2),
+                api.flatten(), api.fc(2 * 2 * 8, 4)),
+    )
+
+
 # ---------------------------------------------------------------------------
 # plan lowering
 # ---------------------------------------------------------------------------
@@ -97,6 +108,44 @@ class TestPlan:
         for name in ("cifar10_tnn", "dvs_cnn_tcn", "cifar10_tnn_wide"):
             g = api.get_graph(name)
             assert api.export_conv_layers(g) == lower(g).to_arch_layers()
+
+    def test_stride_and_pointwise_lowering(self):
+        """stride subsamples AFTER ternarization: the plan records the
+        pre-stride input extent but prices only the kept output pixels."""
+        plan = lower(_strided_graph())
+        convs = [lp for lp in plan.layers if lp.kind == "conv2d"]
+        assert [(c.stride, (c.kh, c.kw)) for c in convs] == \
+            [(2, (3, 3)), (1, (1, 1)), (2, (3, 3))]
+        # pre-stride extents, post-stride pricing
+        assert (convs[0].h, convs[0].w, convs[0].out_pixels) == (8, 8, 16)
+        assert (convs[1].h, convs[1].w, convs[1].out_pixels) == (4, 4, 16)
+        assert (convs[2].h, convs[2].w, convs[2].out_pixels) == (4, 4, 4)
+        assert convs[0].macs == 16 * 3 * 3 * 3 * 8  # kept pixels only
+
+    def test_strided_conv_never_absorbs_pool(self):
+        """Fusing a pool into a strided conv would pool the subsampled
+        grid; the pool must stay a standalone plan step instead."""
+        g = api.CutieGraph(
+            name="sp", input_hw=(8, 8), input_ch=3, n_classes=4,
+            layers=(api.conv2d(3, 8, stride=2), api.pool(),
+                    api.flatten(), api.fc(2 * 2 * 8, 4)),
+        )
+        plan = lower(g)
+        conv = next(lp for lp in plan.layers if lp.kind == "conv2d")
+        assert conv.stride == 2 and conv.pool == 0
+        pool = next(lp for lp in plan.layers if lp.kind == "pool")
+        assert (pool.h, pool.w) == (4, 4)  # pools the strided output
+
+    def test_stride_round_trips_and_defaults_to_one(self):
+        """New plans serialize stride losslessly; dicts written before the
+        field existed deserialize to stride=1 (the old semantics)."""
+        plan = lower(_strided_graph())
+        wire = json.loads(json.dumps(plan.to_dict()))
+        assert ExecutionPlan.from_dict(wire) == plan
+        for lp in wire["layers"]:
+            del lp["stride"]  # a pre-stride-schema plan dict
+        old = ExecutionPlan.from_dict(wire)
+        assert all(lp.stride == 1 for lp in old.layers)
 
     def test_export_conv_layers_legacy_shapes(self):
         """The projected rows keep the legacy geometry (paper networks)."""
@@ -141,6 +190,30 @@ class TestBitsimExact:
         g = api.get_graph("cifar10_tnn_wide_smoke")
         x = jnp.sign(jax.random.normal(jax.random.PRNGKey(2), (2, 16, 16, 3)))
         _, dep = _deployed(g, calib=x)
+        want = dep.forward(x, backend="ref")
+        _exact(dep.forward(x, backend="bitsim"), want)
+        _exact(dep.forward(x, backend="fused"), want)
+
+    def test_strided_and_pointwise_exact(self):
+        """Post-ternarize subsampling is the SAME arithmetic in every
+        backend — strided/1x1 graphs must stay bit-exact across the
+        matrix."""
+        g = _strided_graph()
+        x = jnp.sign(jax.random.normal(jax.random.PRNGKey(11), (3, 8, 8, 3)))
+        _, dep = _deployed(g, calib=x)
+        want = dep.forward(x, backend="ref")
+        _exact(dep.forward(x, backend="bitsim"), want)
+        _exact(dep.forward(x, backend="fused"), want)
+
+    def test_kws_tcn_smoke_batch_exact(self):
+        """The 1-channel KWS TCN (strided stem + pointwise mixers) through
+        the full backend matrix, batch mode."""
+        prog = api.get_net("kws_tcn_smoke")
+        g = prog.graph
+        x = (jax.random.uniform(jax.random.PRNGKey(12),
+                                (2, 4, *g.input_hw, g.input_ch))
+             < 0.1).astype(jnp.float32)
+        dep = prog.quantize(prog.init(jax.random.PRNGKey(0)), calib=x)
         want = dep.forward(x, backend="ref")
         _exact(dep.forward(x, backend="bitsim"), want)
         _exact(dep.forward(x, backend="fused"), want)
@@ -246,7 +319,8 @@ class TestCounters:
         """For schedulable nets the sim only adds fill/drain: divergence in
         [0, 15%] — the gate `check_bench_regression.py --silicon` applies."""
         for name in ("cifar10_tnn", "dvs_cnn_tcn",
-                      "cifar10_tnn_smoke", "dvs_cnn_tcn_smoke"):
+                      "cifar10_tnn_smoke", "dvs_cnn_tcn_smoke",
+                      "kws_tcn", "kws_tcn_smoke"):
             rec = reconcile(api.get_graph(name))
             assert rec["analytic_schedulable"], name
             assert 0.0 <= rec["divergence"] <= 0.15, (name, rec["divergence"])
