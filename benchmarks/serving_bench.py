@@ -22,7 +22,13 @@ trajectory for `repro.serving.SessionPool` continuous batching.  For every
     checked bit-exact against lone sessions fed exactly the frames
     `ActivityGate.plan` selects, and the skipped frames priced in uJ via
     `repro.serving.energy_summary` — energy-per-classification must land
-    strictly below the ungated baseline.
+    strictly below the ungated baseline,
+  * runs an observability cell (schema 4): the largest pool scenario
+    re-driven under a `repro.obs.Tracer`, reporting how each tick's wall
+    time splits across the batcher phases (admit/assemble/step, from
+    `repro.obs.phase_breakdown`) — and asserting the observer effect is
+    nil: the traced run's final logits must be byte-identical to an
+    untraced run of the same scenario, with the step still traced once.
 
 On a CPU host the Pallas backends run in interpreter mode, so wall-clock is
 directional (the JSON's ``meta.jax_backend`` records the host); the
@@ -295,6 +301,56 @@ def bench_gated(deployed, backend: str, pool_size: int, streams: int,
     }
 
 
+def bench_phases(deployed, clips, pool_size: int, backend: str):
+    """The schema-4 observability cell: the same staggered-arrival pool
+    scenario driven twice — once untraced, once under a `repro.obs.Tracer`
+    — with the traced run's final logits checked byte-identical against
+    the untraced run (tracing must observe, never alter), then the trace
+    attributed into per-tick phase fractions via `phase_breakdown`."""
+    from repro.obs import Tracer, phase_breakdown, to_chrome
+
+    g = deployed.graph
+
+    def drive(tracer):
+        pool = deployed.serve(pool_size, backend=backend)
+        pool.admit("__warm__")
+        pool.step({"__warm__": np.zeros((*g.input_hw, g.input_ch), np.float32)})
+        pool.evict("__warm__")
+        batcher = ContinuousBatcher(pool, tracer=tracer)
+        for i in range(clips.shape[0]):
+            batcher.submit(StreamRequest(stream_id=f"s{i}", frames=clips[i],
+                                         arrival=i))
+        results = batcher.run()
+        jax.block_until_ready(pool.state.buf)
+        finals = {r.stream_id: np.asarray(r.logits) for r in results}
+        return batcher, pool, finals
+
+    _, _, plain = drive(None)
+    tracer = Tracer()
+    batcher, pool, traced = drive(tracer)
+    exact = set(plain) == set(traced) and all(
+        (plain[sid] == traced[sid]).all() for sid in plain
+    )
+
+    lane = phase_breakdown(to_chrome(tracer)).get(batcher.track, {})
+    fractions = {
+        name: round(cell["fraction"], 4)
+        for name, cell in lane.get("phases", {}).items()
+    }
+    return {
+        "pool_size": pool_size,
+        "backend": backend,
+        "streams": int(clips.shape[0]),
+        "frames_per_stream": int(clips.shape[1]),
+        "ticks": lane.get("ticks", 0),
+        "tick_total_us": round(lane.get("tick_total_us", 0.0), 1),
+        "trace_events": len(tracer),
+        "trace_count": pool.trace_count,
+        "exact_vs_untraced": exact,
+        "phase_fraction": fractions,
+    }
+
+
 def run(args) -> int:
     net = args.net or (SMOKE_NET if args.smoke else FULL_NET)
     pools = args.pools or ([2, 4] if args.smoke else [2, 4, 8])
@@ -382,8 +438,39 @@ def run(args) -> int:
             f"exact={gated['exact_vs_gate_plan']}"
         )
 
+    phases = None
+    if not args.no_phases:
+        phases = bench_phases(
+            deployed,
+            _event_clips(g, 2 * max(pools), frames,
+                         jax.random.PRNGKey(2 + max(pools))),
+            pool_size=max(pools), backend=backends[0],
+        )
+        if not phases["exact_vs_untraced"]:
+            failures.append(
+                "phases: traced logits != untraced logits (tracing "
+                "perturbed serving — zero-overhead contract broken)"
+            )
+        if phases["trace_count"] != 1:
+            failures.append(
+                f"phases: step retraced {phases['trace_count']}x under "
+                f"tracing"
+            )
+        if not phases["phase_fraction"].get("step", 0.0) > 0.0:
+            failures.append("phases: no step time attributed in the trace")
+        frac = phases["phase_fraction"]
+        print(
+            f"[serving-bench] {'phases':>18s} pool{phases['pool_size']} "
+            f"{phases['backend']:>6s}: {phases['ticks']} ticks, "
+            f"step {frac.get('step', 0.0):.1%} / "
+            f"assemble {frac.get('assemble', 0.0):.1%} / "
+            f"admit {frac.get('admit', 0.0):.1%} / "
+            f"other {frac.get('other', 0.0):.1%}, "
+            f"exact_vs_untraced={phases['exact_vs_untraced']}"
+        )
+
     payload = {
-        "schema": 3,
+        "schema": 4,
         "meta": {
             "smoke": bool(args.smoke),
             "net": net,
@@ -403,12 +490,17 @@ def run(args) -> int:
                 "the activity-gated cell: exact_vs_gate_plan is the "
                 "differential gated-vs-ungated contract and the energy_* "
                 "fields price skipped frames via repro.serving "
-                "energy_summary (sim counters, deterministic)."
+                "energy_summary (sim counters, deterministic).  Schema 4 "
+                "adds the phases cell: the largest pool scenario re-driven "
+                "under a repro.obs.Tracer, phase_fraction splitting tick "
+                "wall time across admit/assemble/step, exact_vs_untraced "
+                "the traced-vs-untraced byte-identity contract."
             ),
         },
         "results": results,
         "fleet": fleet,
         "gated": gated,
+        "phases": phases,
     }
     default_name = "BENCH_serving.smoke.json" if args.smoke else "BENCH_serving.json"
     out = Path(args.out) if args.out else REPO_ROOT / default_name
@@ -438,6 +530,8 @@ def main(argv=None) -> int:
                     help="skip the fleet cell (single-pool sweep only)")
     ap.add_argument("--no-gate", action="store_true",
                     help="skip the activity-gated cell")
+    ap.add_argument("--no-phases", action="store_true",
+                    help="skip the traced phase-breakdown cell")
     ap.add_argument("--duty-cycle", type=float, default=0.4,
                     help="active-frame fraction of the gated cell's traces")
     ap.add_argument("--out", default=None,

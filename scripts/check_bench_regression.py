@@ -67,7 +67,13 @@ this script gates, against the committed ``BENCH_serving.smoke.json``:
   * **mean pool occupancy** per cell within ``--occupancy-drift``
     (default 0.10 absolute) of baseline — the arrival/departure
     simulation is deterministic, so occupancy moving means the scheduler
-    itself changed behavior and the baseline needs a reviewed refresh.
+    itself changed behavior and the baseline needs a reviewed refresh;
+  * the schema-4 **phases cell** (tolerated-but-absent in schema-<=3
+    baselines): ``exact_vs_untraced`` must hold (a `repro.obs.Tracer`
+    observing the pool may never alter its logits), the traced step must
+    still compile exactly once, and the tick-phase fractions must sum to
+    1 with nonzero step time — wall-clock fractions themselves are NOT
+    gated against baseline (runner-noise territory), only reported.
 
     python scripts/check_bench_regression.py BENCH_backends.smoke.json fresh.json
     python scripts/check_bench_regression.py --silicon BENCH_silicon.json fresh.json
@@ -315,6 +321,38 @@ def check_serving(baseline: dict, fresh: dict, latency_tolerance: float,
               f"frames skipped, {saved:.3f} uJ saved, "
               f"{epc:.3f} uJ/cls vs {epc_un:.3f} ungated, "
               f"exact={gated.get('exact_vs_gate_plan')}")
+    # schema-4 traced phase-breakdown cell: absent in schema-<=3 baselines
+    # (and under --no-phases), so everything keys off the FRESH payload
+    phases = fresh.get("phases")
+    if phases:
+        if not phases.get("exact_vs_untraced", False):
+            failures.append(
+                "phases: traced-run logits NOT byte-identical to the "
+                "untraced run — tracing perturbed serving, the "
+                "zero-overhead observability contract is broken"
+            )
+        if phases.get("trace_count") != 1:
+            failures.append(
+                f"phases: step traced {phases.get('trace_count')}x under "
+                "tracing (the tracer must never touch the jit cache)"
+            )
+        frac = phases.get("phase_fraction", {})
+        total = sum(frac.values())
+        if frac and not 0.99 <= total <= 1.01:
+            failures.append(
+                f"phases: phase fractions sum to {total:.3f}, not 1.0 — "
+                "trace attribution lost tick time"
+            )
+        if not frac.get("step", 0.0) > 0.0:
+            failures.append(
+                "phases: no step time attributed in the trace (tick spans "
+                "without step children)"
+            )
+        print(f"[serving-gate] phases: {phases.get('ticks')} ticks, "
+              f"step {frac.get('step', 0.0):.1%} / "
+              f"assemble {frac.get('assemble', 0.0):.1%} / "
+              f"admit {frac.get('admit', 0.0):.1%}, "
+              f"exact_vs_untraced={phases.get('exact_vs_untraced')}")
     # 2) p50/p99 latency ratio + occupancy drift vs baseline (shared cells)
     shared = sorted(set(base_cells) & set(fresh_cells))
     for key in shared:
@@ -391,7 +429,8 @@ def check_serving(baseline: dict, fresh: dict, latency_tolerance: float,
     print(f"[serving-gate] {len(shared)} cells exact, zero-retrace, within "
           f"x{latency_tolerance:.1f} latency and {occupancy_drift:.2f} "
           f"occupancy of baseline"
-          + (", fleet cell clean" if fleet else ""))
+          + (", fleet cell clean" if fleet else "")
+          + (", phases cell clean" if phases else ""))
     return 0
 
 

@@ -1,6 +1,6 @@
 """Append a bench lane's gate table to ``$GITHUB_STEP_SUMMARY``.
 
-One tiny shared formatter for all four bench lanes — CI calls it right
+One tiny shared formatter for the bench lanes — CI calls it right
 after each lane's regression gate so a red run is readable from the job
 summary without downloading artifacts:
 
@@ -8,6 +8,11 @@ summary without downloading artifacts:
     python scripts/ci_summary.py --lane kernels  BENCH_kernels.fresh.json
     python scripts/ci_summary.py --lane silicon  BENCH_silicon.fresh.json
     python scripts/ci_summary.py --lane serving  BENCH_serving.fresh.json
+    python scripts/ci_summary.py --lane obs      fleet_trace.fused.json
+
+The ``obs`` lane takes a Chrome trace JSON (written by ``--trace`` on the
+serve/train launchers) instead of a bench payload and renders the
+per-lane tick-phase attribution table from `repro.obs.trace_summary`.
 
 Writes GitHub-flavored markdown to the file named by the
 ``GITHUB_STEP_SUMMARY`` environment variable (appending, as Actions
@@ -25,7 +30,7 @@ import os
 import sys
 from pathlib import Path
 
-LANES = ("backends", "kernels", "silicon", "serving")
+LANES = ("backends", "kernels", "silicon", "serving", "obs")
 
 
 def _md_table(headers, rows) -> str:
@@ -128,7 +133,46 @@ def summarize_serving(payload: dict) -> str:
             ("gated cell", "duty", "skipped", "uJ saved", "uJ/cls",
              "uJ/cls ungated", "exact"), grow)
         out = f"{out}\n\n{gtable}"
+    phases = payload.get("phases")  # schema 4; absent in older payloads
+    if phases:
+        frac = phases.get("phase_fraction", {})
+        prow = [(
+            f"pool{phases['pool_size']}/{phases['backend']}",
+            phases.get("ticks", 0),
+            *(f"{frac.get(p, 0.0):.1%}"
+              for p in ("step", "assemble", "admit", "other")),
+            _fmt(bool(phases.get("exact_vs_untraced", False))),
+        )]
+        ptable = _md_table(
+            ("phases cell", "ticks", "step", "assemble", "admit", "other",
+             "exact vs untraced"), prow)
+        out = f"{out}\n\n{ptable}"
     return out
+
+
+def summarize_obs(payload: dict) -> str:
+    """Tick-phase table from a Chrome trace document (not a bench JSON)."""
+    sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+    from repro.obs import trace_summary
+
+    s = trace_summary(payload)
+    rows = [
+        (lane, row["ticks"], _fmt(row["tick_total_us"] / 1000.0),
+         *(f"{row['phases'][p]['fraction']:.1%}"
+           for p in ("step", "assemble", "admit", "other")))
+        for lane, row in sorted(s["phase_breakdown"].items())
+    ]
+    table = _md_table(
+        ("lane", "ticks", "tick ms total", "step", "assemble", "admit",
+         "other"), rows)
+    verdict = (
+        f"trace: {s['events']} events across {len(s['lanes'])} lanes, "
+        f"{sum(s['spans'].values())} spans / "
+        f"{sum(s['instants'].values())} instants, "
+        f"nesting={'ok' if not s['nesting_problems'] else '**BROKEN**'}, "
+        f"dropped={s['dropped_events']}"
+    )
+    return f"{verdict}\n\n{table}"
 
 
 SUMMARIZERS = {
@@ -136,6 +180,7 @@ SUMMARIZERS = {
     "kernels": summarize_kernels,
     "silicon": summarize_silicon,
     "serving": summarize_serving,
+    "obs": summarize_obs,
 }
 
 

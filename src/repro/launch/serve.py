@@ -143,7 +143,8 @@ def serve_dvs(args) -> int:
         args.pool, backend=args.backend,
         sharding="auto" if args.shard else None,
     )
-    batcher = ContinuousBatcher(pool)
+    tracer = _make_tracer(args)
+    batcher = ContinuousBatcher(pool, tracer=tracer)
     for i in range(n_streams):
         batcher.submit(StreamRequest(
             stream_id=f"sensor-{i}", frames=frames[i],
@@ -155,6 +156,8 @@ def serve_dvs(args) -> int:
     jax.block_until_ready(pool.state.buf)
     wall = time.time() - t0
     stats = batcher.stats()
+    _write_obs(args, tracer, {batcher.track: deployed}, batcher.metrics,
+               tag="serve-dvs")
 
     finite = all(np.isfinite(r.logits).all() for r in results)
     acc = stats["accuracy"]
@@ -242,6 +245,7 @@ def serve_fleet_scenario(args) -> int:
     duty = args.duty_cycle if args.duty_cycle is not None else (
         0.4 if args.gate else 1.0
     )
+    tracer = _make_tracer(args)
     router = FleetRouter(
         backend=args.backend,
         max_pool_size=args.pool,
@@ -250,6 +254,7 @@ def serve_fleet_scenario(args) -> int:
         ingest=args.ingest,
         sharding="auto" if args.shard else None,
         gate=gate,
+        tracer=tracer,
     )
     deps, clips = {}, {}
     for idx, name in enumerate(net_names):
@@ -372,6 +377,21 @@ def serve_fleet_scenario(args) -> int:
                     f"{name}: non-positive gated energy saving "
                     f"({e['energy_uj_saved']:.3f} uJ at duty {duty:.2f})")
 
+    # the retrace audit and gated savings land in the metrics registry
+    # too, so a --metrics-out snapshot carries the zero-retrace and
+    # energy story next to the occupancy/latency series
+    m_trace = router.metrics.gauge(
+        "cutie_trace_count", "Jit traces per (net, pool rung); contract: <= 1")
+    for name in net_names:
+        for sz, tc in stats["nets"][name]["pools_traced"].items():
+            m_trace.labels(net=name, pool_size=str(sz)).set(tc)
+    if energy:
+        m_saved = router.metrics.gauge(
+            "cutie_gate_energy_saved_uj", "uJ the activity gate saved")
+        for name, e in energy.items():
+            m_saved.labels(net=name).set(e["energy_uj_saved"])
+    _write_obs(args, tracer, deps, router.metrics, tag="serve-fleet")
+
     if args.out:
         report = {"scenario": {
             "nets": net_names, "streams_per_net": n_streams,
@@ -387,6 +407,35 @@ def serve_fleet_scenario(args) -> int:
     for msg in failures:
         print(f"[serve-fleet] FAIL: {msg}", file=sys.stderr)
     return 1 if failures else 0
+
+
+def _make_tracer(args):
+    """A `repro.obs.Tracer` when ``--trace`` was given, else None (the
+    serving layer then runs on NULL_TRACER — zero overhead)."""
+    if not getattr(args, "trace", None):
+        return None
+    from repro.obs import Tracer
+
+    return Tracer(clock=args.trace_clock)
+
+
+def _write_obs(args, tracer, programs, metrics, tag: str) -> None:
+    """Write the ``--trace`` Perfetto JSON (serving spans + one sim
+    layer-timeline track per served program) and the ``--metrics-out``
+    Prometheus snapshot, when requested."""
+    if tracer is not None:
+        from repro.obs import save_chrome
+
+        save_chrome(
+            args.trace, tracer, sim_programs=programs,
+            meta={"scenario": tag, "backend": args.backend},
+        )
+        print(f"[{tag}] trace -> {args.trace} ({len(tracer)} events, "
+              f"{tracer.dropped} dropped; load in ui.perfetto.dev)")
+    if getattr(args, "metrics_out", None):
+        with open(args.metrics_out, "w") as f:
+            f.write(metrics.render())
+        print(f"[{tag}] metrics -> {args.metrics_out}")
 
 
 def _verify_pool_vs_sessions(deployed, results, frames, backend, check: int):
@@ -477,6 +526,18 @@ def main(argv=None):
                     help="gate: consecutive quiet frames before parking")
     ap.add_argument("--out", default=None, metavar="FILE.json",
                     help="fleet: write the full stats report as JSON")
+    ap.add_argument("--trace", default=None, metavar="FILE.json",
+                    help="record a repro.obs trace of the run and write it "
+                         "as Chrome/Perfetto trace JSON (tick/step/feeder "
+                         "spans, park/wake/scale instants, sim layer "
+                         "timelines; inspect with python -m repro.obs)")
+    ap.add_argument("--trace-clock", default="wall",
+                    choices=["wall", "tick"],
+                    help="trace timestamps: wall ns (default) or the "
+                         "deterministic per-event sequence")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE.prom",
+                    help="write the serving metrics registry as a "
+                         "Prometheus text snapshot")
     ap.add_argument("--check-streams", type=int, default=2,
                     help="dvs: streams replayed through single sessions for "
                          "the bit-exactness gate")

@@ -78,6 +78,10 @@ def main(argv=None):
     ap.add_argument("--eval-batches", type=int, default=4)
     ap.add_argument("--gap-bound", type=float, default=SMOKE_GAP_BOUND,
                     help="--smoke: max allowed |qat - deployed| accuracy gap")
+    ap.add_argument("--trace", default=None, metavar="FILE.json",
+                    help="record a repro.obs trace of the run (per-segment "
+                         "step/eval spans + the trained net's sim layer "
+                         "timeline) as Chrome/Perfetto trace JSON")
     args = ap.parse_args(argv)
 
     recipe = smoke_recipe(args.net) if args.smoke else {}
@@ -91,13 +95,26 @@ def main(argv=None):
               f"(pass --resume to continue them)")
         shutil.rmtree(ckpt_dir)
 
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+
+        tracer = Tracer()
     report = train(
         args.net, steps=steps, batch=batch, lr=lr, seed=args.seed,
         ckpt_dir=ckpt_dir, ckpt_every=args.ckpt_every,
         nu_schedule=args.nu_schedule, thresholds=args.thresholds,
         per_channel=args.per_channel, eval_batches=args.eval_batches,
-        backend=args.backend,
+        backend=args.backend, tracer=tracer,
     )
+    if tracer is not None:
+        from repro.obs import save_chrome
+
+        save_chrome(args.trace, tracer,
+                    sim_programs={args.net: report.deployed},
+                    meta={"scenario": "train", "net": args.net})
+        print(f"[train] trace -> {args.trace} ({len(tracer)} events; "
+              f"load in ui.perfetto.dev)")
     print(report.summary())
     print(report.deployed.silicon_report(v=0.5).summary())
     print(f"[train] final checkpoint: step {latest_step(ckpt_dir)} "

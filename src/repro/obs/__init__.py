@@ -1,0 +1,45 @@
+"""repro.obs — zero-overhead-when-disabled observability for the stack.
+
+Three modules:
+
+  * `repro.obs.tracer` — bounded ring-buffer event recorder (`Tracer`;
+    `NULL_TRACER` is the always-available disabled instance the
+    instrumented hot paths hold when tracing is off).
+  * `repro.obs.metrics` — label-keyed counter/gauge/histogram registry
+    with a Prometheus text snapshot (`MetricsRegistry`), plus
+    `SampleWindow`, the bounded latency-trace replacement.
+  * `repro.obs.export` — Chrome/Perfetto trace JSON rendering,
+    sim-derived `layer_timeline` hardware tracks, summaries and diffs.
+
+CLI: ``python -m repro.obs {summarize,export,diff}`` (see `__main__`).
+Wiring: ``--trace PATH`` on `repro.launch.serve` / `repro.launch.train`.
+"""
+from repro.obs.export import (
+    layer_timeline,
+    load,
+    phase_breakdown,
+    save_chrome,
+    to_chrome,
+    trace_diff,
+    trace_summary,
+    validate_nesting,
+)
+from repro.obs.metrics import MetricsRegistry, SampleWindow
+from repro.obs.tracer import NULL_TRACER, Event, NullTracer, Tracer
+
+__all__ = [
+    "Tracer",
+    "NullTracer",
+    "NULL_TRACER",
+    "Event",
+    "MetricsRegistry",
+    "SampleWindow",
+    "to_chrome",
+    "save_chrome",
+    "load",
+    "layer_timeline",
+    "phase_breakdown",
+    "trace_summary",
+    "trace_diff",
+    "validate_nesting",
+]

@@ -67,6 +67,8 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.tracer import NULL_TRACER
 from repro.serving.gating import ActivityGate
 from repro.serving.pool import SessionPool
 from repro.serving.scheduler import ContinuousBatcher, StreamRequest, StreamResult
@@ -143,6 +145,17 @@ class FrameFeeder:
         # double buffers, one pair per ladder size the bucket visits
         self._bufs: Dict[Tuple[int, Tuple[int, ...]], list] = {}
         self._threaded = self._executor is not None
+        # fill spans carry no track, so they land on the lane of the
+        # thread that ran the fill — the cutie-feeder thread when threaded
+        self.tracer = NULL_TRACER
+        self.track: Optional[str] = None
+
+    def bind_tracer(self, tracer, track: Optional[str] = None) -> None:
+        """Attach a tracer (the batcher wires its own through, so feeder
+        spans land in the same trace as the tick spans)."""
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if track is not None:
+            self.track = track
 
     @property
     def threaded(self) -> bool:
@@ -165,16 +178,16 @@ class FrameFeeder:
         entry[1] = flip ^ 1
         return pair[flip]
 
-    @staticmethod
-    def _fill(batch: np.ndarray, active: np.ndarray, items):
-        batch.fill(0.0)
-        active.fill(False)
-        covered: Dict[str, int] = {}
-        for sid, slot, frames, idx in items:
-            batch[slot] = np.asarray(frames[idx], np.float32)
-            active[slot] = True
-            covered[sid] = slot
-        return batch, active, covered
+    def _fill(self, batch: np.ndarray, active: np.ndarray, items):
+        with self.tracer.span("feeder.fill", streams=len(items)):
+            batch.fill(0.0)
+            active.fill(False)
+            covered: Dict[str, int] = {}
+            for sid, slot, frames, idx in items:
+                batch[slot] = np.asarray(frames[idx], np.float32)
+                active[slot] = True
+                covered[sid] = slot
+            return batch, active, covered
 
     def prefetch(self, pool_size: int, frame_shape, items: Sequence) -> None:
         """Assemble the next tick's batch for ``items`` = [(stream_id,
@@ -202,7 +215,8 @@ class FrameFeeder:
         prefetch is outstanding (first tick, or after `invalidate`)."""
         if self._pending is None:
             return None
-        result = self._pending.result()
+        with self.tracer.span("feeder.consume", track=self.track):
+            result = self._pending.result()
         self._pending = None
         return result
 
@@ -212,6 +226,7 @@ class FrameFeeder:
         Called on pool swaps and cancellations, whose re-slotting the
         prefetched assignment can no longer describe."""
         if self._pending is not None:
+            self.tracer.instant("feeder.invalidate", track=self.track)
             self._pending.result()
             self._pending = None
 
@@ -239,6 +254,8 @@ class NetBucket:
         sharding=None,
         jit: bool = True,
         gate: Optional[ActivityGate] = None,
+        tracer=None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         if not getattr(program.graph, "is_temporal", False):
             raise ValueError(
@@ -258,10 +275,14 @@ class NetBucket:
         self.sharding = sharding
         self.jit = jit
         self.gate = gate
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.pools: Dict[int, SessionPool] = {}
         self.feeder = FrameFeeder(mode=ingest) if ingest != "off" else None
+        # the bucket's routing key is the export lane: every tick / gate /
+        # step span of this bucket lands on one named Perfetto track
         self.batcher = ContinuousBatcher(
-            self._pool(self.ladder[0]), feeder=self.feeder, gate=gate
+            self._pool(self.ladder[0]), feeder=self.feeder, gate=gate,
+            tracer=tracer, metrics=metrics, track=name,
         )
         self.scale_events: List[ScaleEvent] = []
         self._calm_ticks = 0
@@ -291,6 +312,9 @@ class NetBucket:
         """Admit into the pool or spill into the bounded FIFO; a full FIFO
         raises `FleetQueueFull` (shed load upstream)."""
         if self.batcher.queue_depth >= self.queue_limit:
+            self.tracer.instant(
+                "queue_full", track=self.name, stream=request.stream_id,
+                queued=self.batcher.queue_depth, pool_size=self.size)
             raise FleetQueueFull(
                 f"bucket {self.name!r}: admission FIFO full "
                 f"({self.queue_limit} queued; pool {self.size} slots)"
@@ -342,6 +366,7 @@ class NetBucket:
         )
         self.batcher.swap_pool(self._pool(new_size))
         self.scale_events.append(event)
+        self.tracer.instant("scale", track=self.name, **event.to_dict())
         return event
 
     # -- the loop ----------------------------------------------------------
@@ -420,6 +445,8 @@ class FleetRouter:
         sharding=None,
         jit: bool = True,
         gate: Optional[ActivityGate] = None,
+        tracer=None,
+        metrics: Optional[MetricsRegistry] = None,
     ):
         self.backend = backend
         self.ladder = tuple(ladder) if ladder else bucket_ladder(max_pool_size)
@@ -429,6 +456,11 @@ class FleetRouter:
         self.sharding = sharding
         self.jit = jit
         self.gate = gate
+        # one tracer + one registry span the whole fleet: every bucket's
+        # events land in one trace (lane per bucket), every bucket's
+        # series in one scrape, keyed by net label
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self.buckets: Dict[str, NetBucket] = {}
         self.tick_index = 0
 
@@ -460,6 +492,8 @@ class FleetRouter:
             sharding=self.sharding,
             jit=self.jit,
             gate=gate if gate is not None else self.gate,
+            tracer=self.tracer,
+            metrics=self.metrics,
         )
         self.buckets[name] = bucket
         return bucket

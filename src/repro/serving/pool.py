@@ -50,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.tcn import StreamState
+from repro.obs.tracer import NULL_TRACER
 from repro.serving.masking import (
     PoolState,
     clear_slot,
@@ -110,6 +111,7 @@ class SessionPool:
         backend: str = "fused",
         jit: bool = True,
         sharding: Union[str, bool, int, None, jax.sharding.Sharding] = None,
+        tracer=None,
     ):
         from repro.api.program import check_backend
 
@@ -127,6 +129,11 @@ class SessionPool:
         self._slots: List[Optional[str]] = [None] * pool_size
         self._slot_of: Dict[str, int] = {}
         self._trace_count = 0
+        # observability: NULL_TRACER when tracing is off (no-op span, no
+        # branch in the hot path); the tracer only ever wraps the jitted
+        # call from the OUTSIDE — nothing observes inside the trace
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.track = getattr(deployed.graph, "name", "pool")
         self.sharding = _resolve_sharding(sharding, pool_size)
         if self.sharding is not None:
             self.state = self._put(self.state)
@@ -246,11 +253,13 @@ class SessionPool:
         n_classes]` logits — callers map slots back to stream ids.  The
         host buffers are copied onto the device at dispatch, so a feeder
         may refill them as soon as this returns (double buffering)."""
-        logits, self.state = self._step(
-            self.state,
-            self._put(jnp.asarray(batch)),
-            self._put(jnp.asarray(active)),
-        )
+        with self.tracer.span("pool.step", track=self.track,
+                              pool_size=self.pool_size):
+            logits, self.state = self._step(
+                self.state,
+                self._put(jnp.asarray(batch)),
+                self._put(jnp.asarray(active)),
+            )
         return logits
 
     def step(self, frames: Mapping[str, jax.Array]) -> Dict[str, jax.Array]:
@@ -261,6 +270,13 @@ class SessionPool:
         """
         logits = self.step_prepared(*self.prepare(frames))
         return {sid: logits[self._slot_of[sid]] for sid in frames}
+
+    def bind_tracer(self, tracer, track: Optional[str] = None) -> None:
+        """Attach a tracer (the batcher wires its own through so pool.step
+        spans land on the same export lane as the tick spans)."""
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if track is not None:
+            self.track = track
 
     # -- introspection -----------------------------------------------------
 

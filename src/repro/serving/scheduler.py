@@ -55,8 +55,14 @@ from typing import Deque, Dict, List, Optional, Set, Tuple
 import jax
 import numpy as np
 
+from repro.obs.metrics import MetricsRegistry, SampleWindow
+from repro.obs.tracer import NULL_TRACER
 from repro.serving.gating import ActivityGate, GateState
 from repro.serving.pool import SessionPool
+
+# Most recent per-tick latency samples kept for exact p50/p99; the metrics
+# histogram keeps the all-time distribution in constant memory beyond this.
+LATENCY_WINDOW = 4096
 
 
 @dataclasses.dataclass
@@ -124,10 +130,42 @@ class ContinuousBatcher:
     slot for the head of the queue on the next tick."""
 
     def __init__(self, pool: SessionPool, feeder=None,
-                 gate: Optional[ActivityGate] = None):
+                 gate: Optional[ActivityGate] = None, tracer=None,
+                 metrics: Optional[MetricsRegistry] = None,
+                 track: Optional[str] = None):
         self.pool = pool
         self.feeder = feeder
         self.gate = gate
+        # observability: the tracer is NULL_TRACER when tracing is off —
+        # span()/instant() no-ops, so the tick path carries no branches;
+        # the metrics registry is always on (bounded, cheap aggregates)
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.track = track or getattr(pool.deployed.graph, "name", "pool")
+        pool.bind_tracer(self.tracer, self.track)
+        if feeder is not None:
+            feeder.bind_tracer(self.tracer, self.track)
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        self._m_occupancy = m.gauge(
+            "cutie_pool_occupancy", "Active slots / pool size, last tick"
+        ).labels(net=self.track)
+        self._m_queue = m.gauge(
+            "cutie_queue_depth", "Streams waiting for a slot"
+        ).labels(net=self.track)
+        self._m_frames = m.counter(
+            "cutie_frames_processed_total", "Frames stepped on the device"
+        ).labels(net=self.track)
+        self._m_skipped = m.counter(
+            "cutie_frames_skipped_total", "Frames the activity gate skipped"
+        ).labels(net=self.track)
+        self._m_parks = m.counter(
+            "cutie_gate_parks_total", "In-flight streams parked by the gate"
+        ).labels(net=self.track)
+        self._m_wakes = m.counter(
+            "cutie_gate_wakes_total", "Parked streams woken by the gate"
+        ).labels(net=self.track)
+        self._m_tick = m.histogram(
+            "cutie_tick_seconds", "Wall time per non-idle batcher tick")
         self._queue: Deque[StreamRequest] = deque()
         self._inflight: Dict[str, StreamRequest] = {}
         self._next_frame: Dict[str, int] = {}
@@ -141,8 +179,16 @@ class ContinuousBatcher:
         self.tick_index = 0
         self.occupancy_trace: List[float] = []
         # (pool_size, seconds) per non-idle tick — the latency sample the
-        # serving bench turns into p50/p99 per bucket size
-        self.latency_trace: List[Tuple[int, float]] = []
+        # serving bench turns into p50/p99 per bucket size.  Bounded: the
+        # deque keeps the newest LATENCY_WINDOW samples for exact
+        # percentiles while every sample also lands in the
+        # cutie_tick_seconds histogram (all-time, constant memory)
+        self.latency_trace: SampleWindow = SampleWindow(
+            LATENCY_WINDOW, observe=self._observe_latency)
+
+    def _observe_latency(self, sample: Tuple[int, float]) -> None:
+        size, seconds = sample
+        self._m_tick.labels(net=self.track, pool_size=str(size)).observe(seconds)
 
     # -- submission --------------------------------------------------------
 
@@ -243,6 +289,7 @@ class ContinuousBatcher:
             if sid in self._inflight:
                 new_pool.admit(sid, state=old.evict(sid))
         self.pool = new_pool
+        new_pool.bind_tracer(self.tracer, self.track)
         if self.feeder is not None:
             # prefetched slot assignments refer to the old pool's geometry
             self.feeder.invalidate()
@@ -318,6 +365,10 @@ class ContinuousBatcher:
             gs.parks += 1
             gs.cursor = self._next_frame[sid] + 1  # the park frame is skipped
             gs.skipped += 1
+            self._m_parks.inc()
+            self._m_skipped.inc()
+            self.tracer.instant("park", track=self.track, stream=sid,
+                                cursor=gs.cursor)
             self._parked[sid] = req
             del self._inflight[sid], self._next_frame[sid]
             parked_now.add(sid)
@@ -345,11 +396,15 @@ class ContinuousBatcher:
                 gs.awake = True
                 gs.quiet_run = 0
                 gs.wakes += 1
+                self._m_wakes.inc()
+                self.tracer.instant("wake", track=self.track, stream=sid,
+                                    frame=gs.cursor)
                 del self._parked[sid]
                 self._queue.append(req)
             else:
                 gs.cursor += 1
                 gs.skipped += 1
+                self._m_skipped.inc()
                 if gs.cursor >= req.frames.shape[0]:
                     self._gate_finish(sid, req)
 
@@ -398,51 +453,65 @@ class ContinuousBatcher:
         per-stream logits of every stream that consumed a frame.  A tick
         with nothing in flight (gap before the next arrival) only advances
         logical time."""
-        parked_now = self._gate_park_inflight()
-        self._gate_scan_parked(parked_now)
-        self._admit_ready()
-        stepping = list(self._inflight)
-        self.occupancy_trace.append(len(stepping) / self.pool.pool_size)
-        if not stepping:
-            if self.feeder is not None:
-                self.feeder.invalidate()
-            self.tick_index += 1
-            return {}
-        t0 = time.perf_counter()
-        batch, active = self._assemble()
-        logits = self.pool.step_prepared(batch, active)
-        out = {sid: logits[self.pool.slot_of(sid)] for sid in stepping}
-        for sid in stepping:
-            self._next_frame[sid] += 1
-            req = self._inflight[sid]
-            gs = self._gate_state.get(sid)
-            if gs is not None:
-                gs.cursor = self._next_frame[sid]
-                gs.processed += 1
-                gs.last_logits = np.asarray(out[sid])
-            if self._next_frame[sid] >= req.frames.shape[0]:
-                self.pool.evict(sid)
-                self.results.append(
-                    StreamResult(
-                        stream_id=sid,
-                        logits=np.asarray(out[sid]),
-                        n_frames=int(req.frames.shape[0]),
-                        admitted_tick=self._admitted_tick[sid],
-                        finished_tick=self.tick_index,
-                        label=req.label,
-                        net=req.net,
-                        frames_processed=gs.processed if gs else -1,
-                        frames_skipped=gs.skipped if gs else 0,
+        tr, track = self.tracer, self.track
+        with tr.span("tick", track=track, tick=self.tick_index):
+            if self.gate is not None:
+                with tr.span("gate.park", track=track):
+                    parked_now = self._gate_park_inflight()
+                with tr.span("gate.scan", track=track):
+                    self._gate_scan_parked(parked_now)
+            with tr.span("admit", track=track):
+                self._admit_ready()
+            stepping = list(self._inflight)
+            occupancy = len(stepping) / self.pool.pool_size
+            self.occupancy_trace.append(occupancy)
+            self._m_occupancy.set(occupancy)
+            self._m_queue.set(len(self._queue))
+            tr.counter("occupancy", occupancy, track=track)
+            tr.counter("queue_depth", len(self._queue), track=track)
+            if not stepping:
+                if self.feeder is not None:
+                    self.feeder.invalidate()
+                self.tick_index += 1
+                return {}
+            t0 = time.perf_counter()
+            with tr.span("assemble", track=track):
+                batch, active = self._assemble()
+            with tr.span("step", track=track, streams=len(stepping)):
+                logits = self.pool.step_prepared(batch, active)
+            out = {sid: logits[self.pool.slot_of(sid)] for sid in stepping}
+            for sid in stepping:
+                self._next_frame[sid] += 1
+                req = self._inflight[sid]
+                gs = self._gate_state.get(sid)
+                if gs is not None:
+                    gs.cursor = self._next_frame[sid]
+                    gs.processed += 1
+                    gs.last_logits = np.asarray(out[sid])
+                if self._next_frame[sid] >= req.frames.shape[0]:
+                    self.pool.evict(sid)
+                    self.results.append(
+                        StreamResult(
+                            stream_id=sid,
+                            logits=np.asarray(out[sid]),
+                            n_frames=int(req.frames.shape[0]),
+                            admitted_tick=self._admitted_tick[sid],
+                            finished_tick=self.tick_index,
+                            label=req.label,
+                            net=req.net,
+                            frames_processed=gs.processed if gs else -1,
+                            frames_skipped=gs.skipped if gs else 0,
+                        )
                     )
-                )
-                del self._inflight[sid], self._next_frame[sid]
-                del self._admitted_tick[sid]
-        self._kick_feeder()
-        self.latency_trace.append(
-            (self.pool.pool_size, time.perf_counter() - t0)
-        )
-        self.tick_index += 1
-        return out
+                    del self._inflight[sid], self._next_frame[sid]
+                    del self._admitted_tick[sid]
+            self._kick_feeder()
+            self._m_frames.inc(len(stepping))
+            self.latency_trace.append(
+                (self.pool.pool_size, time.perf_counter() - t0)
+            )
+            self.tick_index += 1
+            return out
 
     def run(self, max_ticks: Optional[int] = None) -> List[StreamResult]:
         """Tick until every submitted stream has departed (or ``max_ticks``

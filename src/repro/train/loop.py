@@ -46,6 +46,7 @@ from repro.api.program import CutieProgram, check_backend
 from repro.api.registry import get_graph
 from repro.data.pipeline import pipeline_for_net
 from repro.launch.ft import run_with_restarts
+from repro.obs.tracer import NULL_TRACER
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.train import schedules
 from repro.train.evaluate import EvalReport, evaluate
@@ -189,6 +190,7 @@ def train(
     warmup_steps: int = 10,
     noise: float = 0.5,
     log=print,
+    tracer=None,
 ) -> TrainReport:
     """Train a registry net end-to-end: data -> QAT -> quantize -> eval.
 
@@ -201,6 +203,10 @@ def train(
                        packs (recommended; keeps the QAT->deployed gap ~0).
     ``backend``        deploy backend the final eval measures (the fused
                        path is the silicon's datapath).
+    ``tracer``         an optional `repro.obs.Tracer`: the loop emits
+                       per-segment step/eval spans and the final
+                       quantize/eval spans on a lane named after the net
+                       (``--trace`` on `repro.launch.train` wires this).
 
     Returns a `TrainReport`; the final checkpoint stays committed under
     ``ckpt_dir`` and ``report.deployed`` is ready for `.stream()`/
@@ -230,6 +236,7 @@ def train(
     def init_state():
         return init_train_state(prog, key, learn_thresholds=thresholds == "learned")
 
+    tr = tracer if tracer is not None else NULL_TRACER
     losses: List[float] = []
     evals: List[Tuple[int, EvalReport]] = []
     restarts = 0
@@ -250,20 +257,27 @@ def train(
             log(f"[train] segment {si + 1}/{len(segs)}: steps [{a}, {b}) "
                 f"nu={nu_v:.3f} threshold="
                 f"{'learned' if thresholds == 'learned' else f'{th_v:.3f}'}")
-        state, hist = run_with_restarts(
-            lambda: step_jit, init_state, pipe,
-            ckpt_dir=ckpt_dir, n_steps=b, ckpt_every=ckpt_every, log=log,
-        )
-        losses += hist["losses"]
-        restarts += hist["restarts"]
-        # segment-boundary eval (final eval happens below); skip when the
-        # segment ran zero new steps — a resume-at-completion replay would
-        # otherwise pay a fresh quantize+jit per boundary for nothing
-        if b < steps and hist["losses"]:
-            evals.append((b, evaluate(
-                seg_prog, state["params"], pipe,
-                n_batches=max(eval_batches // 2, 1), backend=backend, nu=nu_v,
-            )))
+        with tr.span("train.segment", track=net, segment=si,
+                     steps_from=a, steps_to=b, nu=nu_v):
+            with tr.span("train.steps", track=net, segment=si):
+                state, hist = run_with_restarts(
+                    lambda: step_jit, init_state, pipe,
+                    ckpt_dir=ckpt_dir, n_steps=b, ckpt_every=ckpt_every,
+                    log=log,
+                )
+            losses += hist["losses"]
+            restarts += hist["restarts"]
+            # segment-boundary eval (final eval happens below); skip when
+            # the segment ran zero new steps — a resume-at-completion
+            # replay would otherwise pay a fresh quantize+jit per boundary
+            # for nothing
+            if b < steps and hist["losses"]:
+                with tr.span("train.eval", track=net, segment=si, step=b):
+                    evals.append((b, evaluate(
+                        seg_prog, state["params"], pipe,
+                        n_batches=max(eval_batches // 2, 1), backend=backend,
+                        nu=nu_v,
+                    )))
     wall = time.time() - t0
 
     # final: quantize on the grid the last segment trained — nu_sched.final,
@@ -274,11 +288,14 @@ def train(
     )
     final_prog = CutieProgram(final_graph)
     calib, _ = pipe.batch_at(0)
-    deployed = final_prog.quantize(state["params"], calib=calib, nu=nu_sched.final)
-    final_eval = evaluate(
-        final_prog, state["params"], pipe, deployed=deployed,
-        n_batches=eval_batches, backend=backend, nu=nu_sched.final,
-    )
+    with tr.span("train.quantize", track=net, nu=nu_sched.final):
+        deployed = final_prog.quantize(
+            state["params"], calib=calib, nu=nu_sched.final)
+    with tr.span("train.eval", track=net, step=steps, final=True):
+        final_eval = evaluate(
+            final_prog, state["params"], pipe, deployed=deployed,
+            n_batches=eval_batches, backend=backend, nu=nu_sched.final,
+        )
     learned = state["params"].get("thresh") if thresholds == "learned" else None
     return TrainReport(
         net=net, steps=steps, losses=losses, evals=evals, final_eval=final_eval,
